@@ -1,0 +1,27 @@
+"""Paper Fig. 4: premise value eta*tau_k*L per round (must settle >= 1)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Scale, build_clients, run_mode
+
+
+def run(scale: Scale, out_rows: list, csv_dir=None):
+    for model_name in ("svm-mnist", "cnn-mnist"):
+        is_cnn = model_name != "svm-mnist"
+        rounds = scale.cnn_rounds if is_cnn else scale.rounds
+        tau_max = scale.cnn_tau_max if is_cnn else scale.tau_max
+        model, clients, test = build_clients(model_name, 3, 5, scale)
+        log = run_mode(model, clients, test, "fedveca", scale, rounds=rounds,
+                       tau_max=tau_max)
+        prem = log.column("premise")
+        prem = prem[np.isfinite(prem)]
+        frac_ok = float(np.mean(prem[2:] >= 1.0)) if len(prem) > 2 else float("nan")
+        out_rows.append(dict(
+            name=f"fig4/{model_name}/premise",
+            us_per_call=log.us_per_round,
+            derived=f"frac_rounds_premise_ge_1={frac_ok:.3f}"
+                    f"|median={np.median(prem[2:]) if len(prem) > 2 else float('nan'):.3f}",
+        ))
+        if csv_dir:
+            log.to_csv(f"{csv_dir}/fig4_{model_name}.csv", ["round", "premise", "L", "tau_k"])

@@ -1,0 +1,21 @@
+"""Paper Fig. 5: SVM on Case 1 (IID) and Case 2 (label-exclusive Non-IID)."""
+from __future__ import annotations
+
+from benchmarks.common import Scale, build_clients, fair_baselines, run_mode
+
+
+def run(scale: Scale, out_rows: list, csv_dir=None):
+    for case in (1, 2):
+        model, clients, test = build_clients("svm-mnist", case, 5, scale)
+        veca = run_mode(model, clients, test, "fedveca", scale)
+        base, _ = fair_baselines(model, clients, test, veca, scale)
+        for mode, log in dict(fedveca=veca, **base).items():
+            out_rows.append(dict(
+                name=f"fig5/case{case}/{mode}",
+                us_per_call=log.us_per_round,
+                derived=f"final_acc={log.rows[-1].get('test_acc', float('nan')):.4f}"
+                        f"|final_loss={log.rows[-1]['test_loss']:.4f}",
+            ))
+            if csv_dir:
+                log.to_csv(f"{csv_dir}/fig5_case{case}_{mode}.csv",
+                           ["round", "test_loss", "test_acc"])

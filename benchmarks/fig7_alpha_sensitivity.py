@@ -1,0 +1,23 @@
+"""Paper Fig. 7: sensitivity to 1-alpha_k in {0.5, 0.05, 0.005} (SVM Case 3)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Scale, build_clients, run_mode
+
+
+def run(scale: Scale, out_rows: list, csv_dir=None):
+    model, clients, test = build_clients("svm-mnist", 3, 5, scale)
+    for one_minus in (0.5, 0.05, 0.005):
+        log = run_mode(model, clients, test, "fedveca", scale, alpha=1 - one_minus)
+        losses = log.column("test_loss")
+        losses = losses[np.isfinite(losses)]
+        smooth = float(np.mean(np.abs(np.diff(losses))))  # curve roughness
+        out_rows.append(dict(
+            name=f"fig7/one_minus_alpha={one_minus}",
+            us_per_call=log.us_per_round,
+            derived=f"final_loss={losses[-1]:.4f}|roughness={smooth:.4f}",
+        ))
+        if csv_dir:
+            log.to_csv(f"{csv_dir}/fig7_alpha{one_minus}.csv",
+                       ["round", "test_loss", "test_acc", "tau_k"])

@@ -1,0 +1,26 @@
+"""Paper Fig. 8: varying client count (5/30/50 FedVeca; 50 for baselines)."""
+from __future__ import annotations
+
+from benchmarks.common import Scale, build_clients, fair_baselines, run_mode
+
+
+def run(scale: Scale, out_rows: list, csv_dir=None, counts=(5, 30, 50)):
+    for C in counts:
+        model, clients, test = build_clients("svm-mnist", 3, C, scale)
+        log = run_mode(model, clients, test, "fedveca", scale)
+        out_rows.append(dict(
+            name=f"fig8/fedveca/clients={C}",
+            us_per_call=log.us_per_round,
+            derived=f"final_acc={log.rows[-1].get('test_acc', float('nan')):.4f}"
+                    f"|final_loss={log.rows[-1]['test_loss']:.4f}",
+        ))
+        if csv_dir:
+            log.to_csv(f"{csv_dir}/fig8_C{C}.csv", ["round", "test_loss", "test_acc"])
+        if C == counts[-1]:
+            base, _ = fair_baselines(model, clients, test, log, scale)
+            for mode, blog in base.items():
+                out_rows.append(dict(
+                    name=f"fig8/{mode}/clients={C}",
+                    us_per_call=blog.us_per_round,
+                    derived=f"final_acc={blog.rows[-1].get('test_acc', float('nan')):.4f}",
+                ))

@@ -1,0 +1,183 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from artifacts:
+  §Repro        <- experiments/bench_rows.csv (benchmarks.run output)
+  §Dry-run      <- experiments/dryrun/*.json summary
+  §Roofline     <- roofline table markdown
+  §Perf         <- experiments/dryrun_opt/*.json vs baselines
+
+    PYTHONPATH=src python -m benchmarks.gen_experiments
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.roofline import load, to_markdown  # noqa: E402
+
+
+def repro_section(bench_csv="experiments/bench_rows.csv") -> str:
+    if not os.path.exists(bench_csv):
+        return "_(run `python -m benchmarks.run` to populate)_"
+    import csv
+
+    rows = list(csv.DictReader(open(bench_csv)))
+    by_fig = {}
+    for r in rows:
+        fig = r["name"].split("/")[0]
+        by_fig.setdefault(fig, []).append(r)
+    claims = {
+        "fig3": "FedVeca reaches the centralized loss/acc faster than FedAvg/"
+                "FedNova on Case 3 (both SVM and CNN)",
+        "fig4": "premise eta*tau_k*L >= 1 holds over training",
+        "fig5": "FedVeca matches baselines on IID (Case 1), beats them on "
+                "label-exclusive Non-IID (Case 2)",
+        "fig6": "tau_i fluctuates per client while tau_k stays smooth; "
+                "Case-3 client structure visible in A_(k,i)",
+        "fig7": "1-alpha trades smoothness vs speed (0.5 smooth/slow, 0.005 "
+                "fast/rough, 0.05 sweet spot)",
+        "fig8": "diminishing returns with more clients at fixed total data; "
+                "FedVeca still ahead of baselines at C=50",
+    }
+    out = ["| paper figure | claim | measurement (quick profile) |", "|---|---|---|"]
+    for fig in sorted(by_fig):
+        if fig not in claims:
+            continue
+        ms = "<br>".join(
+            f"`{r['name'].split('/', 1)[1]}`: {r['derived']}" for r in by_fig[fig]
+        )
+        out.append(f"| {fig} | {claims[fig]} | {ms} |")
+    return "\n".join(out)
+
+
+def dryrun_summary() -> str:
+    recs = [json.load(open(p)) for p in sorted(glob.glob("experiments/dryrun/*.json"))]
+    lines = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        sub = [r for r in recs if r["mesh"] == mesh]
+        ok = sum(r["status"] == "OK" for r in sub)
+        skip = sum(r["status"] == "SKIP" for r in sub)
+        fail = sum(r["status"] == "FAIL" for r in sub)
+        lines.append(f"* **{mesh}**: {ok} OK / {skip} SKIP / {fail} FAIL "
+                     f"(of {len(sub)} pairs)")
+        for r in sub:
+            if r["status"] == "FAIL":
+                lines.append(f"  * FAIL {r['tag']}: {r.get('error','')[:120]}")
+    skips = sorted({(r["arch"], r["shape"], r.get("reason", "")) for r in recs
+                    if r["status"] == "SKIP"})
+    lines.append("\nDocumented skips:")
+    for a, s, why in skips:
+        lines.append(f"* `{a}` x `{s}` — {why}")
+    # memory table for the largest pairs
+    lines.append("\nPer-device memory (argument+temp bytes, largest pairs, 16 GB HBM/chip):")
+    lines.append("| pair | args GB/dev | temp GB/dev | fits? |")
+    lines.append("|---|---|---|---|")
+    big = [r for r in recs if r["status"] == "OK" and r["mesh"] == "pod16x16"]
+    big.sort(key=lambda r: -((r["memory"]["argument_bytes"] or 0) +
+                             (r["memory"]["temp_bytes"] or 0)))
+    for r in big[:8]:
+        a = (r["memory"]["argument_bytes"] or 0) / 1e9
+        t = (r["memory"]["temp_bytes"] or 0) / 1e9
+        fits = "yes" if a + t < 16 else "**NO — needs resharding/remat (see notes)**"
+        lines.append(f"| {r['arch']} / {r['shape']} | {a:.1f} | {t:.1f} | {fits} |")
+    return "\n".join(lines)
+
+
+def perf_section() -> str:
+    opts = sorted(glob.glob("experiments/dryrun_opt/*.json"))
+    if not opts:
+        return "_(run `python -m repro.launch.perf` to populate)_"
+    out = []
+    by_pair = {}
+    for p in opts:
+        r = json.load(open(p))
+        by_pair.setdefault(f"{r['arch']}__{r['shape']}", []).append(r)
+    for pair, variants in by_pair.items():
+        base_p = f"experiments/dryrun/{pair}__pod16x16.json"
+        base = json.load(open(base_p)) if os.path.exists(base_p) else None
+        out.append(f"### {pair.replace('__', ' / ')}\n")
+        if base and base["status"] == "OK":
+            b = base["roofline"]
+            out.append(
+                f"**Baseline (paper-faithful):** compute {b['compute_s']:.3e}s, "
+                f"memory {b['memory_s']:.3e}s, collective {b['collective_s']:.3e}s "
+                f"-> bottleneck **{base['bottleneck'].replace('_s','')}**.\n"
+            )
+        out.append("| iteration | hypothesis | compute (s) | memory (s) | collective (s) | dominant-term delta | verdict |")
+        out.append("|---|---|---|---|---|---|---|")
+        dom_key = base["bottleneck"] if base else "collective_s"
+        prev = base["roofline"][dom_key] if base else None
+        for r in variants:
+            if r["status"] != "OK":
+                out.append(f"| {r['variant']} | {r['hypothesis'][:80]}... | — | — | — | — | FAIL: {r.get('error','')[:60]} |")
+                continue
+            v = r["roofline"]
+            dom_new = v[dom_key]
+            delta = (1 - dom_new / prev) * 100 if prev else float("nan")
+            verdict = "**confirmed**" if delta > 5 else ("neutral" if abs(delta) <= 5 else "**refuted (regression)**")
+            out.append(
+                f"| {r['variant']} | {r['hypothesis'][:160]} | {v['compute_s']:.3e} | "
+                f"{v['memory_s']:.3e} | {v['collective_s']:.3e} | "
+                f"{delta:+.1f}% vs baseline | {verdict} |"
+            )
+        out.append("")
+    return "\n".join(out)
+
+
+def roofline_notes(rows) -> str:
+    ok = [r for r in rows if r["status"] == "OK" and r["mesh"] == "pod16x16"]
+    n_coll = sum(r["bottleneck"] == "collective_s" for r in ok)
+    n_mem = sum(r["bottleneck"] == "memory_s" for r in ok)
+    n_comp = sum(r["bottleneck"] == "compute_s" for r in ok)
+    worst = min(ok, key=lambda r: r["useful_flops_ratio"] or 1)
+    best = max(ok, key=lambda r: min(r["useful_flops_ratio"] or 0, 1))
+    return "\n".join([
+        f"* Bottleneck census (single-pod): {n_mem} memory-bound, {n_coll} "
+        f"collective-bound, {n_comp} compute-bound pairs. Decode shapes are "
+        "universally bandwidth/collective-bound (1 token amortizes nothing); "
+        "train/prefill on the big dense archs approach compute-bound only "
+        "after the §Perf fixes.",
+        f"* Best useful-FLOPs ratio: {best['arch']}/{best['shape']} "
+        f"({best['useful_flops_ratio']:.2f}); worst: {worst['arch']}/"
+        f"{worst['shape']} ({worst['useful_flops_ratio']:.2f}).",
+        "* Ratios < 1 on train shapes reflect remat recompute (the scan body "
+        "re-runs the forward in the backward pass) plus attention FLOPs "
+        "absent from 6·N·D; ratios << 1 on decode reflect collective/"
+        "bandwidth overhead around a tiny matvec; xlstm prefill > 1 is the "
+        "documented time-scan undercount (recurrence FLOPs not in HLO "
+        "totals).",
+        "* xLSTM's model axis is largely idle (per-head recurrent mats "
+        "replicated, DESIGN.md §6) — its collective terms are reshard "
+        "traffic, a known cost of running an attention-free family on an "
+        "attention-optimized mesh layout.",
+    ])
+
+
+def main():
+    path = "EXPERIMENTS.md"
+    text = open(path).read()
+    rows = load()
+    repl = {
+        "REPRO_TABLE": repro_section(),
+        "DRYRUN_SUMMARY": dryrun_summary(),
+        "ROOFLINE_TABLE": to_markdown([r for r in rows if r["mesh"] == "pod16x16"])
+        + "\n\nMulti-pod (2x16x16) deltas are in experiments/dryrun/*pod2x16x16.json; "
+        "the pod axis doubles the client cohort (C=32) and halves per-client "
+        "batch; collective bytes per device stay within ~2x of single-pod "
+        "(aggregation all-reduce now spans the pod axis).",
+        "ROOFLINE_NOTES": roofline_notes(rows),
+        "PERF_LOG": perf_section(),
+    }
+    for tag, content in repl.items():
+        pat = re.compile(rf"<!-- {tag} -->.*?(?=\n## |\n### Reading|\Z)", re.S)
+        if f"<!-- {tag} -->" in text:
+            text = pat.sub(f"<!-- {tag} -->\n{content}\n", text, count=1)
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Kernel microbenchmarks: us_per_call of the three Pallas kernels
+(interpret mode on CPU — relative numbers track algorithmic cost, the TPU
+roofline lives in benchmarks/roofline.py) plus their jnp reference paths.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return 1e6 * (time.time() - t0) / iters
+
+
+def run(scale=None, out_rows: list = None, csv_dir=None):
+    r = np.random.RandomState(0)
+    rows = out_rows if out_rows is not None else []
+
+    # vecavg: C=16 clients x 1M params
+    from repro.kernels.vecavg import ops as va, ref as va_ref
+
+    u = jnp.asarray(r.randn(16, 1 << 20), jnp.float32)
+    p = jnp.full((16,), 1.0 / 16, jnp.float32)
+    t_ref = _time(jax.jit(lambda a, b: va_ref.vecavg(a, b, 0.5)), u, p)
+    t_pal = _time(lambda a, b: va.vecavg(a, b, 0.5), u, p)
+    rows.append(dict(name="kernel/vecavg/ref", us_per_call=t_ref,
+                     derived=f"C=16|D=1M|GB={u.nbytes/1e9:.3f}"))
+    rows.append(dict(name="kernel/vecavg/pallas_interp", us_per_call=t_pal,
+                     derived="same"))
+
+    # flash attention: 1k seq
+    from repro.kernels.flash_attention import ops as fa, ref as fa_ref
+
+    q = jnp.asarray(r.randn(1, 1024, 8, 64), jnp.float32)
+    k = jnp.asarray(r.randn(1, 1024, 2, 64), jnp.float32)
+    v = jnp.asarray(r.randn(1, 1024, 2, 64), jnp.float32)
+    t_ref = _time(jax.jit(lambda a, b, c: fa_ref.attention(a, b, c)), q, k, v)
+    t_pal = _time(lambda a, b, c: fa.flash_attention(a, b, c), q, k, v)
+    gflop = 2 * 2 * 1024 * 1024 * 8 * 64 / 1e9
+    rows.append(dict(name="kernel/flash_attention/ref", us_per_call=t_ref,
+                     derived=f"S=1024|GFLOP={gflop:.2f}"))
+    rows.append(dict(name="kernel/flash_attention/pallas_interp", us_per_call=t_pal,
+                     derived="same"))
+
+    # rmsnorm
+    from repro.kernels.rmsnorm import ops as rn, ref as rn_ref
+
+    x = jnp.asarray(r.randn(8192, 1024), jnp.float32)
+    s = jnp.asarray(r.randn(1024) * 0.1, jnp.float32)
+    t_ref = _time(jax.jit(rn_ref.rmsnorm), x, s)
+    t_pal = _time(rn.rmsnorm, x, s)
+    rows.append(dict(name="kernel/rmsnorm/ref", us_per_call=t_ref,
+                     derived=f"rows=8192|d=1024|GB={x.nbytes/1e9:.3f}"))
+    rows.append(dict(name="kernel/rmsnorm/pallas_interp", us_per_call=t_pal,
+                     derived="same"))
+    return rows

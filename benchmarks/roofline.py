@@ -1,0 +1,104 @@
+"""Roofline harness (deliverable g): aggregates the dry-run artifacts into
+the per-(arch x shape x mesh) roofline table — compute/memory/collective
+terms, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs useful-compute ratio.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun); emits
+CSV + a markdown table for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+HEADERS = [
+    "arch", "shape", "mesh", "status", "step", "compute_s", "memory_s",
+    "collective_s", "bottleneck", "hlo_gflops_dev", "hbm_gb_dev",
+    "coll_gb_dev", "peak_mem_gb_dev", "useful_flops_ratio", "compile_s",
+]
+
+
+def load(art_dir: str = "experiments/dryrun") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = dict(arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+                   status=rec["status"])
+        if rec["status"] == "OK":
+            r = rec["roofline"]
+            mem = rec.get("memory") or {}
+            peak = mem.get("temp_bytes") or 0
+            args = mem.get("argument_bytes") or 0
+            row.update(
+                step=rec.get("step"),
+                compute_s=r["compute_s"], memory_s=r["memory_s"],
+                collective_s=r["collective_s"], bottleneck=rec.get("bottleneck"),
+                hlo_gflops_dev=rec["hlo_flops_per_device"] / 1e9,
+                hbm_gb_dev=rec["hlo_bytes_per_device"] / 1e9,
+                coll_gb_dev=rec["collective_bytes_per_device"]["total"] / 1e9,
+                peak_mem_gb_dev=(peak + args) / 1e9,
+                useful_flops_ratio=rec.get("useful_flops_ratio"),
+                compile_s=rec.get("compile_s"),
+            )
+        else:
+            row["reason"] = rec.get("reason") or rec.get("error", "")[:80]
+        rows.append(row)
+    return rows
+
+
+def to_csv(rows: List[Dict], path: str):
+    import csv
+
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=HEADERS + ["reason"], extrasaction="ignore")
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | bottleneck | compute (s) | memory (s) | collective (s) | useful-FLOPs | note |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "OK":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | **{r['bottleneck'].replace('_s','')}** "
+                f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+                f"| {r['useful_flops_ratio']:.2f} | |"
+            )
+        else:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | — | "
+                f"{r['status']}: {r.get('reason','')} |"
+            )
+    return "\n".join(out)
+
+
+def run(scale=None, out_rows: list = None, csv_dir=None, art_dir="experiments/dryrun"):
+    rows = load(art_dir)
+    if csv_dir:
+        to_csv(rows, os.path.join(csv_dir, "roofline.csv"))
+    ok = [r for r in rows if r["status"] == "OK"]
+    skip = [r for r in rows if r["status"] == "SKIP"]
+    fail = [r for r in rows if r["status"] == "FAIL"]
+    if out_rows is not None:
+        for r in ok:
+            dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: r[k])
+            out_rows.append(dict(
+                name=f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                us_per_call=r[dom] * 1e6,  # dominant roofline term in us
+                derived=f"bottleneck={r['bottleneck']}|useful={r['useful_flops_ratio']:.2f}",
+            ))
+        out_rows.append(dict(
+            name="roofline/summary", us_per_call=0.0,
+            derived=f"ok={len(ok)}|skip={len(skip)}|fail={len(fail)}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    rows = run(csv_dir="experiments")
+    print(to_markdown(rows))

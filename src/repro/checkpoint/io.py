@@ -1,0 +1,76 @@
+"""Round-resumable pytree checkpointing: npz payload + JSON manifest.
+
+No orbax in this container; leaves are flattened by '/'-joined keypath into
+one .npz, with dtypes/shapes and user metadata (round index, tau vector,
+controller scalars) in a sidecar manifest so restore() can rebuild exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, tree: Any, meta: Optional[Dict[str, Any]] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    manifest = {
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in flat.items()},
+        "meta": meta or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, default=_json_default)
+
+
+def _json_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(type(o))
+
+
+def restore(path: str, like: Any) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_like = _flatten(like)
+    out = {}
+    for k, v in flat_like.items():
+        if k not in data:
+            raise KeyError(f"checkpoint missing leaf {k!r}")
+        arr = data[k]
+        if tuple(arr.shape) != tuple(v.shape):
+            raise ValueError(f"shape mismatch for {k}: ckpt {arr.shape} vs model {v.shape}")
+        out[k] = arr.astype(v.dtype)
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keys = ["/".join(_path_str(q) for q in path) for path, _ in leaves_p]
+    restored = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), [out[k] for k in keys]
+    )
+    return restored, manifest["meta"]

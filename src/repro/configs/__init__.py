@@ -1,0 +1,11 @@
+from repro.configs.base import (
+    ARCH_MODULES,
+    ASSIGNED_ARCHS,
+    SHAPES,
+    ArchConfig,
+    ShapeConfig,
+    get_arch,
+    get_shape,
+    list_archs,
+    shape_supported,
+)

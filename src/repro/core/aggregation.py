@@ -1,0 +1,110 @@
+"""Generalized FL update rules (paper Eq. 2-3) — reference implementation.
+
+This module is the *literal* transcription of the paper's protocol: explicit
+per-client Python loops over local SGD iterations (Alg. 2) and an explicit
+server aggregation (Alg. 1). It is intentionally unvectorized — it serves as
+
+  1. the oracle that tests/test_fedveca.py checks the fused vectorized
+     round step (core/fedveca.py) against, leaf-for-leaf;
+  2. the documentation of how FedAvg / FedNova / FedVeca specialize the
+     generalized rules: a_i = [1,...,1] for all three; FedAvg constrains
+     tau_i = tau and aggregates unnormalized sums (Eq. 4); FedNova/FedVeca
+     normalize by ||a_i||_1 = tau_i and rescale by tau_k (Eq. 5).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree import (
+    tree_axpy,
+    tree_scale,
+    tree_sqnorm,
+    tree_sub,
+    tree_zeros_like,
+)
+
+
+def local_sgd(loss_fn, params0, batches: Sequence, tau: int, eta: float):
+    """Alg. 2 lines 5-8: tau local SGD steps; returns trajectory info."""
+    grad_fn = jax.grad(lambda p, b: loss_fn(p, b)[0])
+    params = params0
+    grads = []
+    traj = []
+    for lam in range(tau):
+        g = grad_fn(params, batches[lam])
+        grads.append(g)
+        traj.append(params)
+        params = tree_axpy(-eta, g, params)
+    return params, grads, traj
+
+
+def client_round(loss_fn, params0, batches, tau: int, eta: float, gprev_sqnorm: float):
+    """Alg. 2: local updates + estimation of G_i, beta_i, delta_i."""
+    _, grads, traj = local_sgd(loss_fn, params0, batches, tau, eta)
+    # G_i per Eq. (5): normalized accumulated gradient
+    G = tree_zeros_like(params0)
+    for g in grads:
+        G = tree_axpy(1.0 / tau, g, G)
+    g0 = grads[0]
+    beta = 0.0
+    delta = 0.0
+    cum = tree_zeros_like(params0)
+    for lam in range(tau):
+        cum = tree_axpy(1.0, grads[lam], cum)
+        if lam >= 1:
+            num = float(jnp.sqrt(tree_sqnorm(tree_sub(g0, grads[lam]))))
+            den = float(jnp.sqrt(tree_sqnorm(tree_sub(params0, traj[lam]))))
+            beta = max(beta, num / max(den, 1e-20))
+            d = float(tree_sqnorm(cum)) / ((lam + 1) * max(gprev_sqnorm, 1e-20))
+            delta = max(delta, d)
+    return G, g0, beta, delta
+
+
+def server_aggregate(params, Gs: List, taus: np.ndarray, p: np.ndarray, eta: float,
+                     mode: str = "fedveca"):
+    """Alg. 1 line 7 / Eq. (3)+(5): the global step."""
+    taus = np.asarray(taus, np.float64)
+    p = np.asarray(p, np.float64)
+    if mode in ("fedveca", "fednova"):
+        tau_k = float(np.sum(p * taus))
+        d_k = tree_zeros_like(params)
+        for pi, G in zip(p, Gs):
+            d_k = tree_axpy(float(pi), G, d_k)
+        return tree_axpy(1.0, tree_scale(d_k, -eta * tau_k), params), tau_k
+    if mode == "fedavg":
+        # Gs are normalized; un-normalize: sum_i p_i * tau_i * G_i  (Eq. 4)
+        acc = tree_zeros_like(params)
+        for pi, ti, G in zip(p, taus, Gs):
+            acc = tree_axpy(float(pi * ti), G, acc)
+        return tree_axpy(1.0, tree_scale(acc, -eta), params), float(np.sum(p * taus))
+    raise ValueError(mode)
+
+
+def reference_round(loss_fn, params, client_batches, taus, p, eta, gprev_sqnorm=0.0,
+                    mode: str = "fedveca"):
+    """One full round of the paper's protocol, unvectorized (test oracle)."""
+    Gs, g0s, betas, deltas = [], [], [], []
+    for i in range(len(taus)):
+        # per-step batches for this client (bind loop vars by value)
+        batches_i = [
+            jax.tree.map(lambda x, _i=i, _l=l: x[_i][_l], client_batches)
+            for l in range(int(taus[i]))
+        ]
+        G, g0, b, d = client_round(loss_fn, params, batches_i, int(taus[i]), eta,
+                                   gprev_sqnorm)
+        Gs.append(G)
+        g0s.append(g0)
+        betas.append(b)
+        deltas.append(d)
+    new_params, tau_k = server_aggregate(params, Gs, taus, p, eta, mode=mode)
+    global_grad = tree_zeros_like(params)
+    for pi, g0 in zip(p, g0s):
+        global_grad = tree_axpy(float(pi), g0, global_grad)
+    return new_params, dict(
+        beta=np.array(betas), delta=np.array(deltas), tau_k=tau_k,
+        global_grad=global_grad,
+    )

@@ -1,0 +1,136 @@
+"""FedVeca server controller (Algorithm 1): L estimation, A_(k,i),
+Theorem-2 step-size bounds, Eq. (15) tau prediction, premise check.
+
+Host-side scalar math between rounds; everything heavy stays in the jitted
+round step (core/fedveca.py). The controller consumes ONLY RoundStats —
+norms and the global-gradient pytree — never raw parameters, so the round
+step can donate its parameter buffers (in-place update at 33B scale):
+
+  * ||w_{k-1} - w_{k-2}|| comes from the (k-2) round's update_sqnorm,
+  * ||w_0|| from round 0's params_sqnorm,
+  * grad F(w_{k-1}) - grad F(w_{k-2}) from the two retained global-gradient
+    outputs (fresh, non-donated buffers),
+
+realizing the paper's one-round-delayed L estimate (Alg. 1 lines 11-16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.core.fedveca import RoundStats
+from repro.core.tree import tree_norm, tree_sqnorm, tree_sub
+
+
+@dataclasses.dataclass
+class ControllerConfig:
+    eta: float
+    alpha: float = 0.95  # paper's default (1 - alpha_k = 0.05, Fig. 7)
+    tau_max: int = 50  # paper §IV-A4
+    tau_init: int = 2
+    tau_min: int = 2  # paper resets tau<=1 -> 2 (Alg. 1 lines 19-21)
+    eps: float = 1e-12
+
+
+@dataclasses.dataclass
+class ControllerState:
+    round: int = 0
+    L: float = 0.0
+    prev_global_grad: Any = None  # grad F(w_{k-1}) pytree
+    prev2_global_grad: Any = None  # grad F(w_{k-2})
+    prev_grad_sqnorm: float = 0.0  # ||grad F(w_{k-1})||^2 broadcast to clients
+    params0_sqnorm: float = 0.0  # ||w_0||^2 (k=1 L estimate)
+    prev_update_sqnorm: float = 0.0  # ||w_k - w_{k-1}||^2
+    prev2_update_sqnorm: float = 0.0  # ||w_{k-1} - w_{k-2}||^2
+
+
+class FedVecaController:
+    """Predicts tau_(k+1,i) from round-k statistics (Eq. 15)."""
+
+    def __init__(self, cfg: ControllerConfig, num_clients: int):
+        self.cfg = cfg
+        self.C = num_clients
+
+    def init_taus(self) -> np.ndarray:
+        return np.full((self.C,), self.cfg.tau_init, np.int32)
+
+    def init_state(self) -> ControllerState:
+        return ControllerState()
+
+    def update(
+        self, state: ControllerState, stats: RoundStats, _unused=None
+    ) -> tuple[ControllerState, np.ndarray, Dict[str, Any]]:
+        """Consume round-k stats (measured at w_k); emit tau for round k+1."""
+        cfg = self.cfg
+        k = state.round
+
+        # ---- L estimation, one-round delay (Alg. 1 lines 11-16) ----------
+        L_obs = None
+        if k == 1 and state.prev_global_grad is not None:
+            # L_0 = ||gF(w_0)|| / ||w_0||
+            L_obs = float(
+                np.sqrt(state.prev_grad_sqnorm)
+                / max(np.sqrt(state.params0_sqnorm), cfg.eps)
+            )
+        elif k >= 2:
+            num = float(tree_norm(tree_sub(state.prev_global_grad, state.prev2_global_grad)))
+            den = float(np.sqrt(state.prev2_update_sqnorm))
+            L_obs = num / max(den, cfg.eps)
+        L = max(state.L, L_obs) if L_obs is not None else state.L
+
+        # ---- A_(k,i) = eta * beta^2 * delta (Theorem 1) -------------------
+        beta = np.asarray(stats.beta, np.float64)
+        delta = np.asarray(stats.delta, np.float64)
+        A = cfg.eta * np.square(beta) * delta  # [C]
+
+        diag: Dict[str, Any] = {
+            "round": k,
+            "L": L,
+            "A": A,
+            "beta": beta,
+            "delta": delta,
+            "tau_k": float(stats.tau_k),
+            "premise": float(cfg.eta * float(stats.tau_k) * L),  # want >= 1
+        }
+
+        # ---- Eq. (15): tau prediction -------------------------------------
+        if k < 1 or not np.all(np.isfinite(A)) or np.all(A <= cfg.eps):
+            # round 0: no (beta, delta) yet (Alg. 1 runs from k >= 1)
+            tau_next = np.asarray(stats.tau, np.int32).copy()
+        else:
+            A_safe = np.maximum(A, cfg.eps)
+            A_min = float(A_safe.min())
+            # Theorem 2 constraint on alpha_k:
+            #   alpha in (0, 2L/min_i A)  when 2L/min_i A < 1, else (0, 1)
+            bound = 2.0 * L / max(A_min, cfg.eps)
+            alpha_k = min(cfg.alpha, 0.999 * bound if bound < 1.0 else cfg.alpha)
+            denom = A_safe - alpha_k * A_min
+            # direction of the bi-directional vector (Sec. III-A): the sign
+            # of (A_i - alpha_k * min_j A_j); negative => unbounded tau
+            direction = np.sign(denom)
+            tau_next = np.where(
+                denom > cfg.eps,
+                np.floor(A_safe / np.maximum(denom, cfg.eps)),
+                cfg.tau_max,
+            )
+            tau_next = np.where(tau_next <= 1, cfg.tau_min, tau_next)  # Alg.1 19-21
+            tau_next = np.clip(tau_next, cfg.tau_min, cfg.tau_max).astype(np.int32)
+            diag["alpha_k"] = alpha_k
+            diag["direction"] = direction
+
+        new_state = ControllerState(
+            round=k + 1,
+            L=L,
+            prev_global_grad=stats.global_grad,
+            prev2_global_grad=state.prev_global_grad,
+            prev_grad_sqnorm=float(tree_sqnorm(stats.global_grad)),
+            params0_sqnorm=(
+                float(stats.params_sqnorm) if k == 0 else state.params0_sqnorm
+            ),
+            prev_update_sqnorm=float(stats.update_sqnorm),
+            prev2_update_sqnorm=state.prev_update_sqnorm,
+        )
+        diag["tau_next"] = tau_next
+        return new_state, tau_next, diag

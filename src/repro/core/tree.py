@@ -1,0 +1,66 @@
+"""Small pytree math helpers used by the federated core."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_map(f, *ts):
+    return jax.tree.map(f, *ts)
+
+
+def tree_zeros_like(t):
+    return jax.tree.map(jnp.zeros_like, t)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * s).astype(x.dtype), a)
+
+
+def tree_axpy(alpha, x, y):
+    """y + alpha * x, computed in fp32 and cast back to y's dtypes."""
+    return jax.tree.map(
+        lambda xi, yi: (yi.astype(jnp.float32) + alpha * xi.astype(jnp.float32)).astype(yi.dtype),
+        x, y,
+    )
+
+
+def tree_sqnorm(t) -> jax.Array:
+    """Sum of squares over every leaf, fp32 scalar."""
+    leaves = jax.tree.leaves(t)
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+
+
+def tree_norm(t) -> jax.Array:
+    return jnp.sqrt(tree_sqnorm(t))
+
+
+def tree_dot(a, b) -> jax.Array:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return sum(
+        jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)) for x, y in zip(la, lb)
+    )
+
+
+def tree_weighted_sum(stacked, w):
+    """stacked: leaves [C, ...]; w: [C] -> weighted sum over the client axis."""
+    return jax.tree.map(
+        lambda x: jnp.tensordot(w.astype(jnp.float32), x.astype(jnp.float32), axes=1).astype(x.dtype),
+        stacked,
+    )
+
+
+def tree_select(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def tree_cast(t, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), t)

@@ -1,0 +1,137 @@
+"""Prototype-faithful FedVeca: literal Algorithm 1 (server) and Algorithm 2
+(client) as message-passing objects.
+
+This mirrors the paper's Raspberry-Pi/laptop deployment: explicit
+send/receive of (w_k, tau), (F_i, G_i), (grad F(w_{k-1})), (beta_i, delta_i)
+and the STOP flag. It is the slow-but-transparent sibling of the fused
+round step; tests assert both produce the same global models. The message
+log doubles as a wire-protocol trace (bytes counted for the communication
+analysis in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import client_round, server_aggregate
+from repro.core.controller import ControllerConfig, FedVecaController
+from repro.core.tree import tree_axpy, tree_sqnorm, tree_zeros_like
+
+
+def _tree_bytes(t) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
+
+
+class FedVecaClient:
+    """Algorithm 2. Holds private local data; talks only in messages."""
+
+    def __init__(self, client_id: int, model, data, batch_size: int, eta: float,
+                 seed: int = 0):
+        self.id = client_id
+        self.model = model
+        self.data = data
+        self.b = batch_size
+        self.eta = eta
+        self.rng = np.random.RandomState(seed + client_id)
+
+    def _batches(self, tau: int):
+        out = []
+        for _ in range(tau):
+            idx = self.rng.randint(0, len(self.data), size=self.b)
+            if self.data.x.dtype in (np.int32, np.int64):
+                out.append(dict(tokens=jnp.asarray(self.data.x[idx, :-1], jnp.int32),
+                                targets=jnp.asarray(self.data.x[idx, 1:], jnp.int32)))
+            else:
+                out.append(dict(x=jnp.asarray(self.data.x[idx], jnp.float32),
+                                y=jnp.asarray(self.data.y[idx], jnp.int32)))
+        return out
+
+    def local_round(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        """Receive (w_k, tau_i, ||grad F(w_{k-1})||^2); run Alg. 2 lines 3-19."""
+        w_k = msg["w"]
+        tau = int(msg["tau"])
+        gprev_sqnorm = float(msg.get("gprev_sqnorm", 0.0))
+        batches = self._batches(tau)
+        loss0 = float(self.model.loss(w_k, batches[0])[0])
+        G, g0, beta, delta = client_round(
+            self.model.loss, w_k, batches, tau, self.eta, gprev_sqnorm
+        )
+        return dict(id=self.id, G=G, g0=g0, beta=beta, delta=delta, loss0=loss0,
+                    tau=tau)
+
+
+class FedVecaServer:
+    """Algorithm 1. Orchestrates rounds, estimates L, predicts tau."""
+
+    def __init__(self, model, clients: List[FedVecaClient], p: np.ndarray,
+                 eta: float, alpha: float = 0.95, tau_max: int = 50,
+                 tau_init: int = 2, seed: int = 0):
+        self.model = model
+        self.clients = clients
+        self.p = np.asarray(p, np.float64)
+        self.eta = eta
+        self.controller = FedVecaController(
+            ControllerConfig(eta=eta, alpha=alpha, tau_max=tau_max, tau_init=tau_init),
+            len(clients),
+        )
+        self.params = model.init(jax.random.PRNGKey(seed))
+        self.taus = self.controller.init_taus()
+        self.ctrl_state = self.controller.init_state()
+        self.gprev_sqnorm = 0.0
+        self.bytes_sent = 0  # server -> clients
+        self.bytes_recv = 0  # clients -> server
+        self.history: List[Dict[str, Any]] = []
+
+    def round(self) -> Dict[str, Any]:
+        from repro.core.fedveca import RoundStats
+
+        params_start = self.params
+        replies = []
+        for c, tau in zip(self.clients, self.taus):
+            msg = dict(w=self.params, tau=int(tau), gprev_sqnorm=self.gprev_sqnorm)
+            self.bytes_sent += _tree_bytes(self.params) + 16
+            reply = c.local_round(msg)
+            self.bytes_recv += _tree_bytes(reply["G"]) + _tree_bytes(reply["g0"]) + 24
+            replies.append(reply)
+
+        Gs = [r["G"] for r in replies]
+        self.params, tau_k = server_aggregate(
+            self.params, Gs, self.taus, self.p, self.eta, mode="fedveca"
+        )
+        global_grad = tree_zeros_like(params_start)
+        for pi, r in zip(self.p, replies):
+            global_grad = tree_axpy(float(pi), r["g0"], global_grad)
+        stats = RoundStats(
+            loss0=jnp.array([r["loss0"] for r in replies], jnp.float32),
+            beta=jnp.array([r["beta"] for r in replies], jnp.float32),
+            delta=jnp.array([r["delta"] for r in replies], jnp.float32),
+            g0_sqnorm=jnp.array([float(tree_sqnorm(r["g0"])) for r in replies]),
+            tau=jnp.asarray(self.taus),
+            tau_k=jnp.float32(tau_k),
+            global_grad=global_grad,
+            update_sqnorm=jnp.float32(
+                tree_sqnorm(jax.tree.map(lambda a, b: a - b, self.params, params_start))
+            ),
+            params_sqnorm=jnp.float32(tree_sqnorm(params_start)),
+        )
+        self.ctrl_state, self.taus, diag = self.controller.update(
+            self.ctrl_state, stats
+        )
+        self.gprev_sqnorm = float(tree_sqnorm(global_grad))
+        row = dict(round=len(self.history), tau=self.taus.copy(), **{
+            k: diag.get(k) for k in ("L", "premise", "alpha_k")
+        })
+        self.history.append(row)
+        return row
+
+    def run(self, rounds: int):
+        for _ in range(rounds):
+            self.round()
+        # STOP flag (Alg. 1 lines 27-29): signal clients to halt
+        for c in self.clients:
+            self.bytes_sent += 1
+        return self.params

@@ -1,0 +1,116 @@
+"""Pallas TPU flash attention: blockwise online-softmax, causal + sliding
+window, GQA-aware (KV blocks indexed by q_head // group so grouped query
+heads stream the same KV tile from HBM once).
+
+Tiling: grid (B, Hq, nQ, nK), KV innermost; the output tile, running max
+and running denominator persist in VMEM across the KV sweep (their
+BlockSpec index maps are independent of the KV grid axis) — the classic
+flash-attention recurrence. Block sizes default to the MXU-native 128
+multiples; fp32 accumulation regardless of input dtype.
+
+Hardware adaptation note (DESIGN.md §3): this replaces the GPU kernel's
+shared-memory/warp-level reductions with VMEM-resident tiles + sequential
+grid revisits, which is the TPU-idiomatic equivalent.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+               scale: float, causal: bool, window: int, bq: int, bk: int,
+               nk: int, q_offset: int, sq: int, sk: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [BQ, hd]
+    k = k_ref[0, 0].astype(jnp.float32)  # [BK, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = (q @ k.T) * scale  # [BQ, BK]
+
+    qpos = q_offset + i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < sk  # padding
+    mask &= (q_offset + i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)) < (q_offset + sq)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0, 0]  # [BQ]
+    l_prev = l_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    pexp = jnp.exp(s - m_new[:, None])
+    pexp = jnp.where(mask, pexp, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(pexp, axis=-1)
+    o_ref[0, 0] = o_ref[0, 0] * corr[:, None] + pexp @ v
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_new
+
+    @pl.when(j == nk - 1)
+    def _final():
+        o_ref[0, 0] = o_ref[0, 0] / jnp.maximum(l_ref[0, 0], 1e-30)[:, None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           q_offset: int = 0, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = True):
+    """q [B,Sq,Hq,hd], k/v [B,Sk,Hkv,hd] -> [B,Sq,Hq,hd]."""
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Sk, 8))
+    pq = (-Sq) % bq
+    pk = (-Sk) % bk
+    qt = jnp.pad(q.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kt = jnp.pad(k.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vt = jnp.pad(v.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = (Sq + pq) // bq
+    nk = (Sk + pk) // bk
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, nk=nk, q_offset=q_offset, sq=Sq, sk=Sk,
+    )
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, Sq + pq, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, Sq + pq), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, Sq + pq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)[:, :Sq].astype(q.dtype)

@@ -1,0 +1,19 @@
+"""Public flash-attention op: Pallas on TPU, interpret-mode on CPU."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, use_pallas: bool = True,
+                    block_q: int = 128, block_k: int = 128):
+    if not use_pallas:
+        return ref.attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=int(window), q_offset=q_offset,
+        block_q=block_q, block_k=block_k,
+        interpret=jax.default_backend() != "tpu",
+    )

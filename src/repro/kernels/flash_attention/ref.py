@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA + causal + window)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              q_offset: int = 0):
+    """q [B,Sq,Hq,hd], k/v [B,Sk,Hkv,hd] -> [B,Sq,Hq,hd]; fp32 softmax.
+
+    Query i has absolute position q_offset + i; keys are 0..Sk-1.
+    """
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    logits *= 1.0 / math.sqrt(hd)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window:
+        m &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(m[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+    return o.reshape(B, Sq, Hq, hd)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    """x [..., d], scale [d] (zero-centered: out multiplies (1+scale))."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    return (xf * r * (1.0 + scale.astype(jnp.float32))).astype(dt)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused FedVeca vectorized averaging + client norms.
+
+One HBM pass over the stacked client-gradient matrix U[C, D]:
+  * weighted reduction over the client axis  ->  delta_w = -scale * p @ U
+  * per-client squared norms (for the Alg. 2 beta/delta estimators)
+
+The grid tiles D; each step keeps a (C, BLOCK_D) tile resident in VMEM, so
+the stats ride along for free instead of costing a second HBM sweep (the
+point of fusing them — see DESIGN.md §7). C (clients per pod, 16-32) is
+small; BLOCK_D is VMEM/MXU-aligned (multiple of 128 lanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vecavg_kernel(p_ref, scale_ref, u_ref, out_ref, sqn_ref):
+    j = pl.program_id(0)
+    u = u_ref[...].astype(jnp.float32)  # [C, BD]
+    p = p_ref[...].astype(jnp.float32)  # [C]
+    scale = scale_ref[0]
+    out_ref[...] = (-scale * jnp.einsum("c,cd->d", p, u)).astype(out_ref.dtype)
+    partial = jnp.sum(jnp.square(u), axis=-1)  # [C]
+
+    @pl.when(j == 0)
+    def _init():
+        sqn_ref[...] = jnp.zeros_like(sqn_ref)
+
+    sqn_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def vecavg_pallas(u, p, scale, *, block_d: int = 512, interpret: bool = True):
+    """u [C, D], p [C], scale scalar -> (delta_w [D], sqnorms [C])."""
+    C, D = u.shape
+    pad = (-D) % block_d
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad)))
+    Dp = D + pad
+    grid = (Dp // block_d,)
+    scale_arr = jnp.asarray([scale], jnp.float32)
+    out, sqn = pl.pallas_call(
+        _vecavg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((C,), lambda j: (0,)),  # p: resident
+            pl.BlockSpec((1,), lambda j: (0,)),  # scale
+            pl.BlockSpec((C, block_d), lambda j: (0, j)),  # U tile
+        ],
+        out_specs=[
+            pl.BlockSpec((block_d,), lambda j: (j,)),
+            pl.BlockSpec((C,), lambda j: (0,)),  # accumulated across grid
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Dp,), u.dtype),
+            jax.ShapeDtypeStruct((C,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(p, scale_arr, u)
+    return out[:D], sqn

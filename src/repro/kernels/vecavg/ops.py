@@ -1,0 +1,44 @@
+"""Public op: FedVeca aggregation over a pytree of stacked client grads.
+
+Flattens the [C, ...] gradient pytree into [C, D] blocks, runs the fused
+Pallas kernel per leaf, and re-assembles — plus a convenience wrapper that
+matches ref.py on raw matrices. On CPU the kernel runs in interpret mode;
+on TPU it compiles natively (interpret=None -> auto).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vecavg import ref
+from repro.kernels.vecavg.kernel import vecavg_pallas
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def vecavg(u, p, scale, *, use_pallas: bool = True, block_d: int = 512):
+    """Matrix form: u [C, D] -> (delta_w [D], sqnorms [C])."""
+    if not use_pallas:
+        return ref.vecavg(u, p, scale)
+    return vecavg_pallas(u, p, scale, block_d=block_d, interpret=_auto_interpret())
+
+
+def vecavg_tree(grads_stacked: Any, p, scale, *, use_pallas: bool = True) -> Tuple[Any, jax.Array]:
+    """Pytree form: leaves [C, ...] -> (delta_w pytree, sqnorms [C]).
+
+    sqnorms aggregates over all leaves (the full-model client norm).
+    """
+    leaves, treedef = jax.tree.flatten(grads_stacked)
+    C = leaves[0].shape[0]
+    outs = []
+    total_sqn = jnp.zeros((C,), jnp.float32)
+    for leaf in leaves:
+        mat = leaf.reshape(C, -1)
+        dw, sqn = vecavg(mat, p, scale, use_pallas=use_pallas)
+        outs.append(dw.reshape(leaf.shape[1:]))
+        total_sqn = total_sqn + sqn
+    return jax.tree.unflatten(treedef, outs), total_sqn

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the FedVeca vectorized-averaging kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def vecavg(u, p, scale):
+    """u [C, D] step-size-normalized client gradients; p [C]; scale scalar
+    (eta * tau_k).  Returns (delta_w [D], client_sqnorms [C]).
+
+    delta_w = -scale * sum_c p_c * u[c]        (paper Eq. 5 global step)
+    sqnorms = per-client ||u_c||^2 (feeds the beta/delta estimators)
+    """
+    uf = u.astype(jnp.float32)
+    delta = -scale * jnp.einsum("c,cd->d", p.astype(jnp.float32), uf)
+    sqn = jnp.sum(jnp.square(uf), axis=-1)
+    return delta.astype(u.dtype), sqn

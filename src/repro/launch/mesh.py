@@ -1,0 +1,45 @@
+"""Production mesh construction (DESIGN.md §6).
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """v5e pod mesh: (data=16, model=16) = 256 chips; multi_pod prepends
+    pod=2 for the 512-chip two-pod configuration.
+
+    Uses the first prod(shape) devices so the single-pod mesh also builds
+    when 512 placeholder devices exist (dry-run)."""
+    import numpy as np
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    devs = jax.devices()
+    n = 1
+    for s in shape:
+        n *= s
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devs)} "
+            "(dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import)"
+        )
+    return Mesh(np.array(devs[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many (host) devices exist — tests/smoke."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(1, n // data))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def num_clients(mesh: Mesh) -> int:
+    """Federated client cohorts = pod * data axis extent (DESIGN.md §6)."""
+    return mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)

@@ -1,0 +1,58 @@
+"""Run metrics: in-memory history + JSONL/CSV emission."""
+from __future__ import annotations
+
+import csv
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+def _scalarize(v):
+    if isinstance(v, (np.ndarray, list, tuple)):
+        return np.asarray(v).tolist()
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if hasattr(v, "item") and getattr(v, "ndim", 1) == 0:
+        return v.item()
+    return v
+
+
+class RunLogger:
+    def __init__(self, path: Optional[str] = None, name: str = "run"):
+        self.rows: List[Dict[str, Any]] = []
+        self.path = path
+        self.name = name
+        if path:
+            os.makedirs(path, exist_ok=True)
+            self._f = open(os.path.join(path, f"{name}.jsonl"), "w")
+        else:
+            self._f = None
+
+    def log(self, **row):
+        row = {k: _scalarize(v) for k, v in row.items()}
+        self.rows.append(row)
+        if self._f:
+            self._f.write(json.dumps(row) + "\n")
+            self._f.flush()
+
+    def column(self, key, default=np.nan):
+        return np.array([r.get(key, default) for r in self.rows])
+
+    def to_csv(self, path: str, keys: Optional[List[str]] = None):
+        if not self.rows:
+            return
+        keys = keys or sorted({k for r in self.rows for k in r})
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys, extrasaction="ignore")
+            w.writeheader()
+            for r in self.rows:
+                w.writerow({k: r.get(k) for k in keys})
+
+    def close(self):
+        if self._f:
+            self._f.close()

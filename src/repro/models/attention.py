@@ -1,0 +1,261 @@
+"""GQA attention: chunked online-softmax prefill + KV-cache decode.
+
+Three execution paths, all numerically equivalent (tests assert so):
+  * direct einsum (short sequences / smoke tests),
+  * chunked online-softmax over KV blocks (bounded activation memory for
+    32k prefill; pure-jnp sibling of the Pallas flash kernel),
+  * kernels/flash_attention Pallas kernel (TPU target; interpret-validated).
+
+Sliding-window attention uses a ring-buffer KV cache of `window` slots for
+decode — the TPU-native adaptation that makes long_500k decode O(window)
+instead of O(seq) for dense archs (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+from repro.sharding.api import constrain
+
+NEG_INF = -1e30
+
+
+def attn_init(rng, cfg, d: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    r = jax.random.split(rng, 4)
+    p = {
+        "w_q": dense_init(r[0], d, cfg.q_dim, dt),
+        "w_k": dense_init(r[1], d, cfg.kv_dim, dt),
+        "w_v": dense_init(r[2], d, cfg.kv_dim, dt),
+        "w_o": dense_init(r[3], cfg.q_dim, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((cfg.q_dim,), dt)
+        p["b_k"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["b_v"] = jnp.zeros((cfg.kv_dim,), dt)
+    return p
+
+
+def _project_qkv(cfg, p, x, positions, rope: bool):
+    B, S, _ = x.shape
+    q = x @ p["w_q"]
+    k = x @ p["w_k"]
+    v = x @ p["w_v"]
+    if "b_q" in p:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    """q_pos [Sq], k_pos [Sk] -> bool [Sq, Sk] (True = attend)."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def _direct_attention(q, k, v, q_pos, k_pos, causal, window, k_valid=None):
+    """q [B,Sq,Hq,hd], k/v [B,Sk,Hkv,hd] -> [B,Sq,Hq,hd]; fp32 softmax."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    logits *= 1.0 / math.sqrt(hd)
+    m = _mask(q_pos, k_pos, causal, window)  # [Sq, Sk]
+    if k_valid is not None:  # [B, Sk] cache-slot validity
+        m = m[None, None, None] & k_valid[:, None, None, None, :]
+    else:
+        m = m[None, None, None]
+    logits = jnp.where(m, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+    return o.reshape(B, Sq, Hq, hd)
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, q_block=512, k_block=1024):
+    """Online-softmax attention, scanning KV blocks; O(Sq*k_block) memory."""
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    nq = -(-Sq // q_block)
+    nk = -(-Sk // k_block)
+    pad_q = nq * q_block - Sq
+    pad_k = nk * k_block - Sk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, (0, pad_q), constant_values=-1)
+    kpos = jnp.pad(k_pos, (0, pad_k), constant_values=2**30)
+    qb = qp.reshape(B, nq, q_block, Hkv, G, hd)
+    kb = kp.reshape(B, nk, k_block, Hkv, hd)
+    vb = vp.reshape(B, nk, k_block, Hkv, hd)
+    qposb = qpos.reshape(nq, q_block)
+    kposb = kpos.reshape(nk, k_block)
+
+    def per_qblock(qi, qpos_i):
+        # qi [B, qb, Hkv, G, hd]
+        acc0 = jnp.zeros(qi.shape, jnp.float32)
+        m0 = jnp.full((B, q_block, Hkv, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_block, Hkv, G), jnp.float32)
+
+        def kv_step(carry, blk):
+            acc, m, l = carry
+            kj, vj, kpos_j = blk
+            logit = jnp.einsum("bqhgd,bkhd->bqhgk", qi, kj).astype(jnp.float32) * scale
+            msk = _mask(qpos_i, kpos_j, causal, window) & (kpos_j < 2**30)[None, :]
+            msk = msk[None, :, None, None, :]
+            logit = jnp.where(msk, logit, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logit, axis=-1))
+            p = jnp.exp(logit - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p.astype(vj.dtype), vj
+            ).astype(jnp.float32)
+            return (acc, m_new, l), None
+
+        # unroll=True: the KV sweep is static in the HLO, so compiled
+        # cost_analysis counts every block (roofline accuracy) and the TPU
+        # scheduler can software-pipeline the tiles.
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step,
+            (acc0, m0, l0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), kposb),
+            unroll=True,
+        )
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    # vmap (not lax.map): q blocks are independent; vectorizing keeps them
+    # in the cost model and lets XLA fuse across blocks.
+    out = jax.vmap(per_qblock)(qb.swapaxes(0, 1), qposb)  # [nq, B, qb, Hkv, G, hd]
+    out = out.swapaxes(0, 1).reshape(B, nq * q_block, Hq, hd)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def attention_block(cfg, p, x, positions, *, window: Optional[int] = None,
+                    causal: bool = True, impl: str = "auto"):
+    """Full (training / prefill) attention sub-block. x [B,S,d]."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, positions, cfg.rope)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    win = cfg.sliding_window if window is None else window
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        o = fa_ops.flash_attention(q, k, v, causal=causal, window=win)
+    elif impl == "direct" or (impl == "auto" and S <= 2048):
+        o = _direct_attention(q, k, v, positions, positions, causal, win)
+    else:
+        o = _chunked_attention(q, k, v, positions, positions, causal, win)
+    o = constrain(o, "batch", None, "heads", None)
+    return o.reshape(B, S, cfg.q_dim) @ p["w_o"]
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, W, Hkv, hd]
+    v: jax.Array  # [B, W, Hkv, hd]
+    pos: jax.Array  # [B, W] absolute position of each slot, -1 = empty
+
+
+def init_kv_cache(cfg, batch: int, seq_len: int, window: int = 0):
+    """Full cache of `seq_len` slots, or ring buffer of `window` slots."""
+    W = window if window else seq_len
+    dt = jnp.dtype(cfg.param_dtype)
+    shape = (batch, W, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dt),
+        v=jnp.zeros(shape, dt),
+        pos=jnp.full((batch, W), -1, jnp.int32),
+    )
+
+
+def decode_attention_block(cfg, p, x, cache: KVCache, pos, *, window: int = 0,
+                           cache_update: str = "scatter"):
+    """One-token decode. x [B,1,d], pos [B] absolute position of the token.
+
+    Ring-buffer semantics: the new token's K/V lands in slot pos % W; the
+    mask combines slot validity (pos >= 0), causality and the window.
+
+    cache_update: "scatter" (baseline .at[].set) or "mask" (one-hot
+    jnp.where — shardable in-place update; a batch-sharded cache scatter
+    with global row indices makes GSPMD all-gather the cache, see
+    EXPERIMENTS.md §Perf / qwen1.5-32b decode_32k).
+    """
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(cfg, p, x, pos[:, None], cfg.rope)
+    W = cache.k.shape[1]
+    slot = (pos % W).astype(jnp.int32)
+    if cache_update == "mask":
+        sel = (jnp.arange(W, dtype=jnp.int32)[None, :] == slot[:, None])  # [B,W]
+        k = jnp.where(sel[..., None, None], k_new, cache.k)
+        v = jnp.where(sel[..., None, None], v_new, cache.v)
+        kpos = jnp.where(sel, pos[:, None].astype(jnp.int32), cache.pos)
+    else:
+        bidx = jnp.arange(B)
+        k = cache.k.at[bidx, slot].set(k_new[:, 0])
+        v = cache.v.at[bidx, slot].set(v_new[:, 0])
+        kpos = cache.pos.at[bidx, slot].set(pos.astype(jnp.int32))
+    new_cache = KVCache(k, v, kpos)
+
+    G = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(B, cfg.num_kv_heads, G, cfg.head_dim)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32)
+    logits *= 1.0 / math.sqrt(cfg.head_dim)
+    valid = kpos >= 0
+    valid &= kpos <= pos[:, None]
+    if window:
+        valid &= kpos > (pos[:, None] - window)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", w.astype(v.dtype), v)
+    o = o.reshape(B, 1, cfg.q_dim)
+    return o @ p["w_o"], new_cache
+
+
+def prefill_kv_cache(cfg, p, x, positions, *, window: int = 0, pad_to: int = 0):
+    """Compute K/V for a full prompt and lay them into a (ring) cache.
+
+    Full attention: cache capacity is max(pad_to, S) — pass pad_to > S to
+    leave room for subsequently decoded tokens. SWA: ring buffer of `window`.
+    """
+    _, k, v = _project_qkv(cfg, p, x, positions, cfg.rope)
+    B, S = x.shape[0], x.shape[1]
+    W = window if window else max(pad_to, S)
+    if W >= S:
+        pad = W - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.pad(
+            jnp.broadcast_to(positions, (B, S)).astype(jnp.int32),
+            ((0, 0), (0, pad)), constant_values=-1,
+        )
+        return KVCache(k, v, pos)
+    # ring buffer keeps the last W tokens (slot = pos % W)
+    k = k[:, -W:]
+    v = v[:, -W:]
+    pos = jnp.broadcast_to(positions[-W:], (B, W)).astype(jnp.int32)
+    shift = (S % W)
+    k = jnp.roll(k, shift, axis=1)
+    v = jnp.roll(v, shift, axis=1)
+    pos = jnp.roll(pos, shift, axis=1)
+    return KVCache(k, v, pos)

@@ -1,0 +1,157 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The mel-spectrogram + conv frontend is STUBBED per the assignment carve-out:
+``input_specs()`` provides precomputed frame embeddings [B, encoder_seq,
+frontend_dim]; everything downstream (encoder stack, cross-attention,
+decoder) is real and trained.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_norm,
+    cross_entropy,
+    dense_init,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    norm_init,
+    stacked,
+)
+from repro.sharding.api import constrain
+
+
+def _enc_layer_init(rng, cfg):
+    r = jax.random.split(rng, 2)
+    d = cfg.d_model
+    return {
+        "norm1": norm_init(cfg, d),
+        "norm2": norm_init(cfg, d),
+        "attn": attn.attn_init(r[0], cfg, d),
+        "mlp": mlp_init(r[1], cfg, d, cfg.d_ff),
+    }
+
+
+def _dec_layer_init(rng, cfg):
+    r = jax.random.split(rng, 3)
+    d = cfg.d_model
+    return {
+        "norm1": norm_init(cfg, d),
+        "norm_x": norm_init(cfg, d),
+        "norm2": norm_init(cfg, d),
+        "self_attn": attn.attn_init(r[0], cfg, d),
+        "cross_attn": attn.attn_init(r[1], cfg, d),
+        "mlp": mlp_init(r[2], cfg, d, cfg.d_ff),
+    }
+
+
+def init_params(rng, cfg):
+    r = jax.random.split(rng, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    max_pos = max(cfg.encoder_seq, 32768)
+    return {
+        "frame_proj": dense_init(r[0], cfg.frontend_dim, cfg.d_model, dt),
+        "enc_pos": embed_init(r[1], max(cfg.encoder_seq, 8), cfg.d_model, dt),
+        "embed": embed_init(r[2], cfg.vocab_size, cfg.d_model, dt),
+        "pos_embed": embed_init(r[3], max_pos, cfg.d_model, dt),
+        "enc_layers": stacked(r[4], cfg.encoder_layers, _enc_layer_init, cfg),
+        "dec_layers": stacked(r[5], cfg.num_layers, _dec_layer_init, cfg),
+        "enc_final_norm": norm_init(cfg, cfg.d_model),
+        "final_norm": norm_init(cfg, cfg.d_model),
+    }
+
+
+def encode(cfg, p, frames, unroll=1):
+    """frames [B, T_enc, frontend_dim] -> [B, T_enc, d]."""
+    h = (frames @ p["frame_proj"]).astype(jnp.dtype(cfg.compute_dtype))
+    h = h + p["enc_pos"][: h.shape[1]][None].astype(h.dtype)
+    positions = jnp.arange(h.shape[1])
+
+    def body(h, lp):
+        hn = apply_norm(cfg, lp["norm1"], h)
+        h = h + attn.attention_block(cfg, lp["attn"], hn, positions, causal=False)
+        hn2 = apply_norm(cfg, lp["norm2"], h)
+        h = h + mlp_apply(cfg, lp["mlp"], hn2)
+        return constrain(h, "batch", None, "embed"), None
+
+    h, _ = jax.lax.scan(jax.checkpoint(body), h, p["enc_layers"], unroll=unroll)
+    return apply_norm(cfg, p["enc_final_norm"], h)
+
+
+def _cross_attention(cfg, lp, h, enc_out):
+    """Query from decoder states, K/V from encoder output (no RoPE)."""
+    B, S, _ = h.shape
+    T = enc_out.shape[1]
+    q = (h @ lp["w_q"])
+    k = (enc_out @ lp["w_k"])
+    v = (enc_out @ lp["w_v"])
+    if "b_q" in lp:
+        q, k, v = q + lp["b_q"], k + lp["b_k"], v + lp["b_v"]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    o = attn._direct_attention(
+        q, k, v, jnp.arange(S), jnp.arange(T), causal=False, window=0
+    )
+    return o.reshape(B, S, cfg.q_dim) @ lp["w_o"]
+
+
+def forward(cfg, p, batch, remat=True, unroll=1, **_):
+    """batch: {frames [B,T,frontend_dim], tokens [B,S]} -> (logits, aux)."""
+    enc_out = encode(cfg, p, batch["frames"], unroll=unroll)
+    tokens = batch["tokens"]
+    h = p["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    S = h.shape[1]
+    h = h + p["pos_embed"][:S][None].astype(h.dtype)
+    positions = jnp.arange(S)
+
+    def body(h, lp):
+        hn = apply_norm(cfg, lp["norm1"], h)
+        h = h + attn.attention_block(cfg, lp["self_attn"], hn, positions, causal=True)
+        hx = apply_norm(cfg, lp["norm_x"], h)
+        h = h + _cross_attention(cfg, lp["cross_attn"], hx, enc_out)
+        hn2 = apply_norm(cfg, lp["norm2"], h)
+        h = h + mlp_apply(cfg, lp["mlp"], hn2)
+        return constrain(h, "batch", None, "embed"), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body_fn, h, p["dec_layers"], unroll=unroll)
+    h = apply_norm(cfg, p["final_norm"], h)
+    logits = h @ p["embed"].T
+    return constrain(logits, "batch", None, "vocab"), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg, p, batch, **kw):
+    logits, aux = forward(cfg, p, batch, **kw)
+    ce = cross_entropy(logits, batch["targets"], batch.get("loss_mask"))
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def prefill(cfg, p, batch, unroll=1, **_):
+    """Prompt forward; cache = decoder self-attn KV + precomputed enc K/V."""
+    enc_out = encode(cfg, p, batch["frames"], unroll=unroll)
+    logits, _ = forward(cfg, p, batch, unroll=unroll)
+    # decoder self-attention caches per layer
+    tokens = batch["tokens"]
+    h = p["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    S = h.shape[1]
+    h = h + p["pos_embed"][:S][None].astype(h.dtype)
+    positions = jnp.arange(S)
+
+    def body(h, lp):
+        hn = apply_norm(cfg, lp["norm1"], h)
+        kv = attn.prefill_kv_cache(cfg, lp["self_attn"], hn, positions)
+        h = h + attn.attention_block(cfg, lp["self_attn"], hn, positions, causal=True)
+        hx = apply_norm(cfg, lp["norm_x"], h)
+        h = h + _cross_attention(cfg, lp["cross_attn"], hx, enc_out)
+        hn2 = apply_norm(cfg, lp["norm2"], h)
+        h = h + mlp_apply(cfg, lp["mlp"], hn2)
+        return h, kv
+
+    h, kv = jax.lax.scan(body, h, p["dec_layers"], unroll=unroll)
+    return logits[:, -1], {"kv": kv, "enc_out": enc_out}

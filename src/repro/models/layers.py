@@ -1,0 +1,149 @@
+"""Common building blocks for the model zoo (pure JAX, no flax).
+
+Parameters are nested dicts of jnp arrays; per-layer parameters are stacked
+along a leading axis so the decoder stacks can `lax.scan` over layers
+(keeps HLO size independent of depth — essential for 512-device dry-runs
+on one CPU).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(rng, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(rng, vocab: int, dim: int, dtype):
+    return (jax.random.normal(rng, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+def stacked(rng, n: int, init_fn, *args, **kw):
+    """Stack `n` independent inits along axis 0 (for lax.scan over layers)."""
+    rngs = jax.random.split(rng, n)
+    return jax.vmap(lambda r: init_fn(r, *args, **kw))(rngs)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_init(cfg, dim: int):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((dim,), jnp.float32)}
+    return {"scale": jnp.zeros((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def act_fn(name: str):
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "sq_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "silu":
+        return jax.nn.silu
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN): swiglu (gated) or plain activation
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, cfg, d: int, f: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    r = jax.random.split(rng, 3)
+    p = {"w_down": dense_init(r[2], f, d, dt)}
+    if cfg.mlp_act == "swiglu":
+        p["w_gate"] = dense_init(r[0], d, f, dt)
+        p["w_up"] = dense_init(r[1], d, f, dt)
+    else:
+        p["w_up"] = dense_init(r[1], d, f, dt)
+        if cfg.mlp_bias:
+            p["b_up"] = jnp.zeros((f,), dt)
+            p["b_down"] = jnp.zeros((d,), dt)
+    return p
+
+
+def mlp_apply(cfg, p, x):
+    from repro.sharding.api import constrain
+
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = x @ p["w_up"]
+        if "b_up" in p:
+            h = h + p["b_up"]
+        h = act_fn(cfg.mlp_act)(h)
+    h = constrain(h, "batch", None, "ff")
+    y = h @ p["w_down"]
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S] (int)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits, targets, mask=None):
+    """Token-level CE in fp32. logits [..., V], targets int [...]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

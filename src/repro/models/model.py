@@ -1,0 +1,124 @@
+"""Unified model API: build_model(config) -> Model.
+
+Every architecture exposes the same functional surface so the federated
+runtime, the train/serve steps and the dry-run treat the zoo uniformly:
+
+    model.init(rng)                         -> params
+    model.loss(params, batch)               -> (scalar, metrics)
+    model.forward(params, batch)            -> (logits, aux)
+    model.prefill(params, batch)            -> (last_logits, cache)
+    model.decode_step(params, cache, token, pos) -> (logits, cache)
+    model.init_cache(batch, seq_len)        -> cache
+    model.input_specs(shape_cfg)            -> dict of ShapeDtypeStruct
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, simple, transformer
+
+
+class Model(NamedTuple):
+    config: ArchConfig
+    init: Callable
+    loss: Callable
+    forward: Callable
+    prefill: Optional[Callable]
+    decode_step: Optional[Callable]
+    init_cache: Optional[Callable]
+    input_specs: Callable
+
+
+def _lm_input_specs(cfg: ArchConfig, shape: ShapeConfig, *, per_device_batch=None):
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    extras = {}
+    if cfg.family == "audio":
+        extras["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.frontend_dim), jnp.dtype(cfg.compute_dtype)
+        )
+    if cfg.family == "vlm":
+        extras["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.vision_dim), jnp.dtype(cfg.compute_dtype)
+        )
+    if shape.kind == "train":
+        return dict(
+            tokens=jax.ShapeDtypeStruct((B, S), tok),
+            targets=jax.ShapeDtypeStruct((B, S), tok),
+            **extras,
+        )
+    if shape.kind == "prefill":
+        return dict(tokens=jax.ShapeDtypeStruct((B, S), tok), **extras)
+    # decode: one token against a seq_len cache
+    return dict(
+        token=jax.ShapeDtypeStruct((B,), tok),
+        pos=jax.ShapeDtypeStruct((B,), tok),
+    )
+
+
+def _toy_input_specs(cfg: ArchConfig, shape: ShapeConfig, **_):
+    B = shape.global_batch
+    return dict(
+        x=jax.ShapeDtypeStruct((B,) + tuple(cfg.input_shape), jnp.float32),
+        y=jax.ShapeDtypeStruct((B,), jnp.int32),
+    )
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "toy":
+        if cfg.name.startswith("svm"):
+            return Model(
+                config=cfg,
+                init=functools.partial(simple.svm_init, cfg=cfg),
+                loss=functools.partial(simple.svm_loss, cfg),
+                forward=functools.partial(simple.svm_forward, cfg),
+                prefill=None,
+                decode_step=None,
+                init_cache=None,
+                input_specs=functools.partial(_toy_input_specs, cfg),
+            )
+        return Model(
+            config=cfg,
+            init=functools.partial(simple.cnn_init, cfg=cfg),
+            loss=functools.partial(simple.cnn_loss, cfg),
+            forward=functools.partial(simple.cnn_forward, cfg),
+            prefill=None,
+            decode_step=None,
+            init_cache=None,
+            input_specs=functools.partial(_toy_input_specs, cfg),
+        )
+
+    if cfg.family == "audio":
+        return Model(
+            config=cfg,
+            init=lambda rng: encdec.init_params(rng, cfg),
+            loss=functools.partial(encdec.loss_fn, cfg),
+            forward=functools.partial(encdec.forward, cfg),
+            prefill=functools.partial(encdec.prefill, cfg),
+            decode_step=None,  # decode shapes skipped for whisper (DESIGN §5)
+            init_cache=None,
+            input_specs=functools.partial(_lm_input_specs, cfg),
+        )
+
+    return Model(
+        config=cfg,
+        init=lambda rng: transformer.init_params(rng, cfg),
+        loss=functools.partial(transformer.loss_fn, cfg),
+        forward=functools.partial(transformer.forward, cfg),
+        prefill=functools.partial(transformer.prefill, cfg),
+        decode_step=functools.partial(transformer.decode_step, cfg),
+        init_cache=functools.partial(transformer.init_cache, cfg),
+        input_specs=functools.partial(_lm_input_specs, cfg),
+    )
+
+
+def build_model_by_name(name: str, reduced: bool = False) -> Model:
+    from repro.configs import get_arch
+
+    cfg = get_arch(name)
+    return build_model(cfg.reduced() if reduced else cfg)

@@ -1,0 +1,90 @@
+"""The paper's own models (§IV-A2): squared-SVM and the small CNN.
+
+* squared-SVM: fully-connected layer, binary even/odd label, squared-hinge
+  loss — convex + Lipschitz-smooth, satisfying Assumption 1 (the model the
+  paper's theory targets).
+* CNN (footnote 2): two 5x5x32 convs, two 2x2 maxpools, fc 1568->256 (MNIST)
+  or the flattened equivalent for CIFAR shapes, fc ->10, softmax CE —
+  non-convex (used by the paper to probe Assumption-1 violation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def svm_init(rng, cfg):
+    in_dim = int(jnp.prod(jnp.array(cfg.input_shape)))
+    return {
+        "w": dense_init(rng, in_dim, 1, jnp.float32, scale=0.01),
+        "b": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def svm_forward(cfg, p, batch):
+    x = batch["x"].reshape(batch["x"].shape[0], -1)
+    return (x @ p["w"] + p["b"])[:, 0]  # margin score
+
+
+def svm_loss(cfg, p, batch):
+    """Squared hinge: mean(max(0, 1 - y*f(x))^2) + L2. y in {-1, +1}."""
+    s = svm_forward(cfg, p, batch)
+    y = batch["y"].astype(jnp.float32) * 2.0 - 1.0  # {0,1} -> {-1,+1}
+    hinge = jnp.maximum(0.0, 1.0 - y * s)
+    reg = 0.5 * 1e-4 * (jnp.sum(jnp.square(p["w"])) + jnp.sum(jnp.square(p["b"])))
+    loss = jnp.mean(jnp.square(hinge)) + reg
+    acc = jnp.mean((s > 0) == (y > 0))
+    return loss, {"ce": loss, "acc": acc}
+
+
+def cnn_init(rng, cfg):
+    r = jax.random.split(rng, 4)
+    h, w, c = cfg.input_shape
+    # two conv+pool halvings
+    fh, fw = h // 4, w // 4
+    flat = fh * fw * 32
+    return {
+        "conv1": (jax.random.normal(r[0], (5, 5, c, 32)) * (1.0 / (5 * 5 * c) ** 0.5)).astype(jnp.float32),
+        "b1": jnp.zeros((32,), jnp.float32),
+        "conv2": (jax.random.normal(r[1], (5, 5, 32, 32)) * (1.0 / (5 * 5 * 32) ** 0.5)).astype(jnp.float32),
+        "b2": jnp.zeros((32,), jnp.float32),
+        "fc1": dense_init(r[2], flat, 256, jnp.float32),
+        "bf1": jnp.zeros((256,), jnp.float32),
+        "fc2": dense_init(r[3], 256, cfg.num_classes, jnp.float32),
+        "bf2": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jax.nn.relu(y + b)
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_forward(cfg, p, batch):
+    x = batch["x"].reshape((-1,) + tuple(cfg.input_shape))
+    x = _maxpool(_conv(x, p["conv1"], p["b1"]))
+    x = _maxpool(_conv(x, p["conv2"], p["b2"]))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ p["fc1"] + p["bf1"])
+    return x @ p["fc2"] + p["bf2"]
+
+
+def cnn_loss(cfg, p, batch):
+    logits = cnn_forward(cfg, p, batch)
+    y = batch["y"].astype(jnp.int32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - ll)
+    acc = jnp.mean(jnp.argmax(logits, -1) == y)
+    return loss, {"ce": loss, "acc": acc}

@@ -1,0 +1,116 @@
+"""Mamba-style selective SSM block (the SSM half of Hymba's hybrid heads).
+
+Training/prefill uses a chunked `lax.scan` over time (state [B, d_in, N]),
+which keeps HLO size constant and activation memory O(chunk). Decode carries
+the state explicitly — O(1) per token, which is what makes long_500k decode
+native for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+class SSMState(NamedTuple):
+    h: jax.Array  # [B, d_in, N]
+    conv: jax.Array  # [B, K-1, d_in] last inputs for the causal depthwise conv
+
+
+def ssm_init(rng, cfg, d: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    d_in = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    r = jax.random.split(rng, 6)
+    return {
+        "w_in": dense_init(r[0], d, 2 * d_in, dt),  # x and gate residual
+        "w_out": dense_init(r[1], d_in, d, dt),
+        "conv_w": (jax.random.normal(r[2], (cfg.ssm_conv, d_in), jnp.float32) * 0.1).astype(dt),
+        "w_bc": dense_init(r[3], d_in, 2 * N, dt),
+        "w_dt": dense_init(r[4], d_in, 1, dt),
+        "dt_bias": jnp.zeros((d_in,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32))[None, :].repeat(d_in, 0),
+        "D": jnp.ones((d_in,), jnp.float32),
+    }
+
+
+def _causal_conv(x, w, init_carry=None):
+    """x [B,S,d_in], depthwise causal conv, kernel K. Returns y, last K-1."""
+    K = w.shape[0]
+    B = x.shape[0]
+    if init_carry is None:
+        init_carry = jnp.zeros((B, K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([init_carry, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    return y, xp[:, -(K - 1) :]
+
+
+def _ssm_scan(p, u, h0, chunk: int = 16):
+    """Selective scan. u [B,S,d_in] (post-conv, post-act) -> y, h_final."""
+    B, S, d_in = u.shape
+    N = p["A_log"].shape[-1]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [d_in, N]
+    bc = u @ p["w_bc"]  # [B,S,2N]
+    Bm, Cm = jnp.split(bc.astype(jnp.float32), 2, axis=-1)  # [B,S,N]
+    # per-channel step size: scalar projection + per-channel bias (mamba's
+    # dt_rank path collapsed to rank-1, biased to ~softplus(0)=0.69)
+    dt = jax.nn.softplus(
+        (u @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"][None, None, :]
+    )  # [B,S,d_in]
+    uf = u.astype(jnp.float32)
+
+    pad = (-S) % chunk
+    nC = (S + pad) // chunk
+
+    def pad_t(x):
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+
+    uc = pad_t(uf).reshape(B, nC, chunk, d_in).swapaxes(0, 1)
+    Bc = pad_t(Bm).reshape(B, nC, chunk, N).swapaxes(0, 1)
+    Cc = pad_t(Cm).reshape(B, nC, chunk, N).swapaxes(0, 1)
+    dc = pad_t(dt).reshape(B, nC, chunk, d_in).swapaxes(0, 1)
+
+    def chunk_step(h, blk):
+        ub, bb, cb, db = blk
+
+        def t_step(h, t):
+            ut, bt, ct, dtt = t  # [B,d_in], [B,N], [B,N], [B,1]
+            da = jnp.exp(dtt[..., None] * A[None])  # [B,d_in,N]
+            h = da * h + (dtt * ut)[..., None] * bt[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, ct)
+            return h, y
+
+        h, ys = jax.lax.scan(t_step, h, (ub.swapaxes(0, 1), bb.swapaxes(0, 1),
+                                         cb.swapaxes(0, 1), db.swapaxes(0, 1)))
+        return h, ys.swapaxes(0, 1)  # [B, chunk, d_in]
+
+    h_fin, ys = jax.lax.scan(chunk_step, h0.astype(jnp.float32), (uc, Bc, Cc, dc))
+    y = ys.swapaxes(0, 1).reshape(B, nC * chunk, d_in)[:, :S]
+    y = y + uf * p["D"][None, None, :]
+    return y, h_fin
+
+
+def ssm_apply(cfg, p, x, state: SSMState | None = None):
+    """x [B,S,d] -> (y [B,S,d], new_state)."""
+    B, S, d = x.shape
+    d_in = cfg.ssm_expand * d
+    xz = x @ p["w_in"]
+    u, z = jnp.split(xz, 2, axis=-1)  # [B,S,d_in] each
+    conv_carry = state.conv if state is not None else None
+    u, conv_carry = _causal_conv(u, p["conv_w"], conv_carry)
+    u = jax.nn.silu(u)
+    h0 = state.h if state is not None else jnp.zeros((B, d_in, cfg.ssm_state), jnp.float32)
+    y, h_fin = _ssm_scan(p, u, h0)
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return y, SSMState(h=h_fin, conv=conv_carry)
+
+
+def init_ssm_state(cfg, batch: int, d: int, dtype=jnp.float32):
+    d_in = cfg.ssm_expand * d
+    return SSMState(
+        h=jnp.zeros((batch, d_in, cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, d_in), jnp.dtype(dtype)),
+    )

@@ -1,0 +1,386 @@
+"""Decoder stacks: dense / MoE / hybrid (attn+SSM) / xLSTM families.
+
+Layer parameters are stacked on a leading axis and the stack is a single
+`lax.scan` over layers with `jax.checkpoint` on the body (activation
+rematerialization) — HLO size and compile time are depth-independent.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    apply_norm,
+    cross_entropy,
+    dense_init,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    norm_init,
+    rmsnorm,
+    stacked,
+)
+from repro.sharding.api import constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def layer_init(rng, cfg):
+    r = jax.random.split(rng, 5)
+    d = cfg.d_model
+    p: Dict[str, Any] = {
+        "norm1": norm_init(cfg, d),
+        "norm2": norm_init(cfg, d),
+        "attn": attn.attn_init(r[0], cfg, d),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_mod.moe_init(r[1], cfg, d)
+    elif cfg.d_ff:
+        p["mlp"] = mlp_init(r[1], cfg, d, cfg.d_ff)
+    if cfg.hybrid_parallel_ssm:
+        p["ssm"] = ssm_mod.ssm_init(r[2], cfg, d)
+        # per-branch output norms for the hybrid fusion (Hymba eq. 2)
+        p["attn_out_norm"] = {"scale": jnp.zeros((d,), jnp.float32)}
+        p["ssm_out_norm"] = {"scale": jnp.zeros((d,), jnp.float32)}
+    return p
+
+
+def init_params(rng, cfg):
+    r = jax.random.split(rng, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Dict[str, Any] = {
+        "embed": embed_init(r[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": norm_init(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(r[1], cfg.d_model, cfg.vocab_size, dt)
+    if cfg.learned_pos:
+        # extended learned-position range: covers the largest non-decode
+        # assigned shape (32k); whisper's native 448 limit is documented in
+        # configs/whisper_medium.py and decode shapes are skipped for it.
+        max_pos = max(cfg.encoder_seq, 2048 if cfg.family == "toy" else 32768)
+        p["pos_embed"] = embed_init(r[4], max_pos, cfg.d_model, dt)
+    if cfg.family == "ssm":  # xLSTM
+        pat = cfg.xlstm_pattern
+        n_super = cfg.num_layers // len(pat)
+        n_m = pat.count("m")
+        n_s = pat.count("s")
+        sub = jax.random.split(r[2], 4)
+        p["xlstm"] = {
+            "m_norm": stacked(sub[0], n_super * n_m, lambda k: norm_init(cfg, cfg.d_model)),
+            "m": stacked(sub[1], n_super * n_m, xlstm_mod.mlstm_init, cfg, cfg.d_model),
+            "s_norm": stacked(sub[2], n_super * n_s, lambda k: norm_init(cfg, cfg.d_model)),
+            "s": stacked(sub[3], n_super * n_s, xlstm_mod.slstm_init, cfg, cfg.d_model),
+        }
+        # reshape stacks to [n_super, n_per_super, ...] for the nested scan
+        p["xlstm"] = jax.tree.map(
+            lambda x: x.reshape((n_super, x.shape[0] // n_super) + x.shape[1:])
+            if x.shape[0] != n_super else x[:, None],
+            p["xlstm"],
+        )
+    else:
+        p["layers"] = stacked(r[3], cfg.num_layers, layer_init, cfg)
+    if cfg.vision_dim:
+        p["vision_proj"] = dense_init(r[5], cfg.vision_dim, cfg.d_model, dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _hybrid_fuse(cfg, p, a_out, s_out):
+    a = rmsnorm(a_out, p["attn_out_norm"]["scale"])
+    s = rmsnorm(s_out, p["ssm_out_norm"]["scale"])
+    return 0.5 * (a + s)
+
+
+def layer_apply(cfg, lp, h, positions, impl="auto", window=None):
+    aux = jnp.zeros((), jnp.float32)
+    hn = apply_norm(cfg, lp["norm1"], h)
+    a_out = attn.attention_block(cfg, lp["attn"], hn, positions, impl=impl, window=window)
+    if cfg.hybrid_parallel_ssm:
+        s_out, _ = ssm_mod.ssm_apply(cfg, lp["ssm"], hn)
+        h = h + _hybrid_fuse(cfg, lp, a_out, s_out)
+    else:
+        h = h + a_out
+    h = constrain(h, "batch", None, "embed")
+    hn2 = apply_norm(cfg, lp["norm2"], h)
+    if cfg.is_moe:
+        y, aux = moe_mod.moe_apply(cfg, lp["moe"], hn2)
+        h = h + y
+    elif cfg.d_ff:
+        h = h + mlp_apply(cfg, lp["mlp"], hn2)
+    return constrain(h, "batch", None, "embed"), aux
+
+
+def embed_tokens(cfg, p, batch):
+    tokens = batch["tokens"]
+    h = p["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.vision_dim and "patches" in batch:
+        pe = (batch["patches"] @ p["vision_proj"]).astype(h.dtype)
+        np_ = pe.shape[1]
+        h = jnp.concatenate([pe, h[:, np_:]], axis=1) if np_ <= h.shape[1] else h
+    if cfg.learned_pos:
+        S = h.shape[1]
+        h = h + p["pos_embed"][:S][None].astype(h.dtype)
+    return h
+
+
+def unembed(cfg, p, h):
+    h = apply_norm(cfg, p["final_norm"], h)
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = h @ w
+    return constrain(logits, "batch", None, "vocab")
+
+
+def _remat_wrap(body, remat):
+    """remat: True (full recompute) | False | "dots" (save matmul outputs —
+    jax.checkpoint_policies.dots_with_no_batch_dims_saveable)."""
+    if remat is True:
+        return jax.checkpoint(body)
+    if remat == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return body
+
+
+def forward(cfg, p, batch, impl="auto", window=None, remat=True, unroll=1):
+    """-> (logits [B,S,V], aux_loss). Decoder-only families."""
+    h = embed_tokens(cfg, p, batch)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+
+    if cfg.family == "ssm":
+        h = _xlstm_stack(cfg, p["xlstm"], h, remat=remat, unroll=unroll)
+        return unembed(cfg, p, h), jnp.zeros((), jnp.float32)
+
+    def body(carry, lp):
+        h, aux = carry
+        h, a = layer_apply(cfg, lp, h, positions, impl=impl, window=window)
+        return (h, aux + a), None
+
+    body_fn = _remat_wrap(body, remat)
+    (h, aux), _ = jax.lax.scan(
+        body_fn, (h, jnp.zeros((), jnp.float32)), p["layers"], unroll=unroll
+    )
+    return unembed(cfg, p, h), aux / max(cfg.num_layers, 1)
+
+
+def _xlstm_stack(cfg, xp, h, remat=True, unroll=1):  # noqa: D401
+    """Scan over super-blocks; the inner mLSTM/sLSTM runs are fully
+    unrolled (<= 7 bodies) so per-super-block cost is exact in the HLO cost
+    model; the outer scan takes the two-point `unroll` knob (dry-run)."""
+
+    def super_block(h, sp):
+        def m_body(h, mp):
+            hn = apply_norm(cfg, mp["norm"], h)
+            y, _ = xlstm_mod.mlstm_apply(cfg, mp["p"], hn)
+            return h + y, None
+
+        h, _ = jax.lax.scan(m_body, h, {"norm": sp["m_norm"], "p": sp["m"]},
+                            unroll=True)
+
+        def s_body(h, spp):
+            hn = apply_norm(cfg, spp["norm"], h)
+            y, _ = xlstm_mod.slstm_apply(cfg, spp["p"], hn)
+            return h + y, None
+
+        h, _ = jax.lax.scan(s_body, h, {"norm": sp["s_norm"], "p": sp["s"]},
+                            unroll=True)
+        return h, None
+
+    blk = _remat_wrap(super_block, remat)
+    h, _ = jax.lax.scan(blk, h, xp, unroll=unroll)
+    return h
+
+
+def loss_fn(cfg, p, batch, impl="auto", window=None, remat=True, unroll=1):
+    logits, aux = forward(cfg, p, batch, impl=impl, window=window, remat=remat,
+                          unroll=unroll)
+    ce = cross_entropy(logits, batch["targets"], batch.get("loss_mask"))
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+
+class DecodeCache(NamedTuple):
+    kv: Optional[attn.KVCache]  # leaves stacked [L, ...]
+    ssm: Optional[ssm_mod.SSMState]  # hybrid only, stacked [L, ...]
+    xlstm_m: Optional[xlstm_mod.MLSTMState]  # [n_super, n_m, ...]
+    xlstm_s: Optional[xlstm_mod.SLSTMState]  # [n_super, n_s, ...]
+
+
+def init_cache(cfg, batch: int, seq_len: int, window: int = 0) -> DecodeCache:
+    kv = ssm_st = xm = xs = None
+    if cfg.family == "ssm":
+        pat = cfg.xlstm_pattern
+        n_super = cfg.num_layers // len(pat)
+        xm = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_super, pat.count("m")) + x.shape),
+            xlstm_mod.init_mlstm_state(cfg, batch, cfg.d_model),
+        )
+        xs = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_super, pat.count("s")) + x.shape),
+            xlstm_mod.init_slstm_state(cfg, batch, cfg.d_model),
+        )
+    else:
+        W = window or cfg.sliding_window
+        one = attn.init_kv_cache(cfg, batch, seq_len, window=W)
+        kv = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), one)
+        if cfg.hybrid_parallel_ssm:
+            st = ssm_mod.init_ssm_state(cfg, batch, cfg.d_model, dtype=cfg.param_dtype)
+            ssm_st = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), st
+            )
+    return DecodeCache(kv=kv, ssm=ssm_st, xlstm_m=xm, xlstm_s=xs)
+
+
+def decode_step(cfg, p, cache: DecodeCache, token, pos, window: int = 0, unroll=1,
+                cache_update: str = "scatter"):
+    """token [B] int32, pos [B] int32 -> (logits [B, V], new cache)."""
+    B = token.shape[0]
+    h = p["embed"][token][:, None].astype(jnp.dtype(cfg.compute_dtype))  # [B,1,d]
+    if cfg.learned_pos:
+        h = h + p["pos_embed"][pos][:, None].astype(h.dtype)
+
+    if cfg.family == "ssm":
+        h, xm, xs = _xlstm_decode(cfg, p["xlstm"], h, cache, unroll=unroll)
+        logits = unembed(cfg, p, h)[:, 0]
+        return logits, DecodeCache(None, None, xm, xs)
+
+    W = window or cfg.sliding_window
+
+    def body(carry, xs_):
+        h = carry
+        lp, kv_l, ssm_l = xs_
+        hn = apply_norm(cfg, lp["norm1"], h)
+        a_out, kv_new = attn.decode_attention_block(cfg, lp["attn"], hn, kv_l, pos,
+                                                     window=W, cache_update=cache_update)
+        new_ssm = ssm_l
+        if cfg.hybrid_parallel_ssm:
+            s_out, new_ssm = ssm_mod.ssm_apply(cfg, lp["ssm"], hn, ssm_l)
+            h = h + _hybrid_fuse(cfg, lp, a_out, s_out)
+        else:
+            h = h + a_out
+        hn2 = apply_norm(cfg, lp["norm2"], h)
+        if cfg.is_moe:
+            y, _ = moe_mod.moe_apply(cfg, lp["moe"], hn2)
+            h = h + y
+        elif cfg.d_ff:
+            h = h + mlp_apply(cfg, lp["mlp"], hn2)
+        return h, (kv_new, new_ssm)
+
+    h, (kv, ssm_st) = jax.lax.scan(body, h, (p["layers"], cache.kv, cache.ssm),
+                                   unroll=unroll)
+    logits = unembed(cfg, p, h)[:, 0]
+    return logits, DecodeCache(kv=kv, ssm=ssm_st, xlstm_m=None, xlstm_s=None)
+
+
+def _xlstm_decode(cfg, xp, h, cache: DecodeCache, unroll=1):
+    def super_block(h, xs_):
+        sp, m_st, s_st = xs_
+
+        def m_body(h, t):
+            mp, st = t
+            hn = apply_norm(cfg, mp["norm"], h)
+            y, st = xlstm_mod.mlstm_apply(cfg, mp["p"], hn, st)
+            return h + y, st
+
+        h, m_st = jax.lax.scan(m_body, h, ({"norm": sp["m_norm"], "p": sp["m"]}, m_st),
+                               unroll=True)
+
+        def s_body(h, t):
+            spp, st = t
+            hn = apply_norm(cfg, spp["norm"], h)
+            y, st = xlstm_mod.slstm_apply(cfg, spp["p"], hn, st)
+            return h + y, st
+
+        h, s_st = jax.lax.scan(s_body, h, ({"norm": sp["s_norm"], "p": sp["s"]}, s_st),
+                               unroll=True)
+        return h, (m_st, s_st)
+
+    h, (xm, xs) = jax.lax.scan(super_block, h, (xp, cache.xlstm_m, cache.xlstm_s),
+                               unroll=unroll)
+    return h, xm, xs
+
+
+def prefill(cfg, p, batch, impl="auto", window: int = 0, pad_to: int = 0, unroll=1):
+    """Full-prompt forward; returns (last-token logits [B,V], DecodeCache).
+
+    `pad_to`: full-attention cache capacity (room for decoded tokens).
+    """
+    h = embed_tokens(cfg, p, batch)
+    B, S = h.shape[:2]
+    positions = jnp.arange(S)
+    W = window or cfg.sliding_window
+
+    if cfg.family == "ssm":
+        # run the stack step-free but capture final recurrent states
+        cache = init_cache(cfg, B, S)
+        h2, xm, xs = _xlstm_prefill_states(cfg, p["xlstm"], h, cache)
+        logits = unembed(cfg, p, h2)[:, -1]
+        return logits, DecodeCache(None, None, xm, xs)
+
+    def body(carry, lp):
+        h = carry
+        hn = apply_norm(cfg, lp["norm1"], h)
+        a_out = attn.attention_block(cfg, lp["attn"], hn, positions, impl=impl, window=window)
+        kv = attn.prefill_kv_cache(cfg, lp["attn"], hn, positions, window=W, pad_to=pad_to)
+        new_ssm = None
+        if cfg.hybrid_parallel_ssm:
+            s_out, new_ssm = ssm_mod.ssm_apply(cfg, lp["ssm"], hn)
+            h = h + _hybrid_fuse(cfg, lp, a_out, s_out)
+        else:
+            h = h + a_out
+        hn2 = apply_norm(cfg, lp["norm2"], h)
+        if cfg.is_moe:
+            y, _ = moe_mod.moe_apply(cfg, lp["moe"], hn2)
+            h = h + y
+        elif cfg.d_ff:
+            h = h + mlp_apply(cfg, lp["mlp"], hn2)
+        return h, (kv, new_ssm)
+
+    h, (kv, ssm_st) = jax.lax.scan(jax.checkpoint(body), h, p["layers"],
+                                   unroll=unroll)
+    logits = unembed(cfg, p, h)[:, -1]
+    return logits, DecodeCache(kv=kv, ssm=ssm_st, xlstm_m=None, xlstm_s=None)
+
+
+def _xlstm_prefill_states(cfg, xp, h, cache: DecodeCache):
+    def super_block(h, xs_):
+        sp, m_st, s_st = xs_
+
+        def m_body(h, t):
+            mp, st = t
+            hn = apply_norm(cfg, mp["norm"], h)
+            y, st = xlstm_mod.mlstm_apply(cfg, mp["p"], hn, st)
+            return h + y, st
+
+        h, m_st = jax.lax.scan(m_body, h, ({"norm": sp["m_norm"], "p": sp["m"]}, m_st))
+
+        def s_body(h, t):
+            spp, st = t
+            hn = apply_norm(cfg, spp["norm"], h)
+            y, st = xlstm_mod.slstm_apply(cfg, spp["p"], hn, st)
+            return h + y, st
+
+        h, s_st = jax.lax.scan(s_body, h, ({"norm": sp["s_norm"], "p": sp["s"]}, s_st))
+        return h, (m_st, s_st)
+
+    h, (xm, xs) = jax.lax.scan(super_block, h, (xp, cache.xlstm_m, cache.xlstm_s))
+    return h, xm, xs

@@ -1,0 +1,154 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory) and sLSTM.
+
+Both are recurrences over time executed with `lax.scan` (stabilized
+exponential gating with a running max-state `m`, per the paper's Eq. 15/23).
+Decode carries (C, n, m) / (c, n, h, m) states explicitly — O(1) per token.
+
+The 48-layer xlstm-1.3b stacks super-blocks of 7 mLSTM + 1 sLSTM
+(xLSTM[7:1]); transformer.py scans over super-blocks with the two
+type-specific parameter stacks interleaved in order.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array  # [B, H, hd, hd] matrix memory
+    n: jax.Array  # [B, H, hd] normalizer
+    m: jax.Array  # [B, H] max-state (gate stabilizer)
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # [B, H, hd]
+    n: jax.Array  # [B, H, hd]
+    h: jax.Array  # [B, H, hd]
+    m: jax.Array  # [B, H]
+
+
+def mlstm_init(rng, cfg, d: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    d_in = int(cfg.xlstm_proj_factor * d)
+    r = jax.random.split(rng, 7)
+    return {
+        "w_up": dense_init(r[0], d, 2 * d_in, dt),  # x branch + output gate branch
+        "w_q": dense_init(r[1], d_in, d_in, dt),
+        "w_k": dense_init(r[2], d_in, d_in, dt),
+        "w_v": dense_init(r[3], d_in, d_in, dt),
+        "w_if": dense_init(r[4], d_in, 2 * cfg.num_heads, jnp.float32, scale=0.01),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((cfg.num_heads,)), jnp.ones((cfg.num_heads,)) * 3.0]
+        ).astype(jnp.float32),
+        "w_down": dense_init(r[5], d_in, d, dt),
+    }
+
+
+def mlstm_apply(cfg, p, x, state: MLSTMState | None = None):
+    """x [B,S,d] -> (y [B,S,d], state). Sequential scan over S."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    d_in = int(cfg.xlstm_proj_factor * d)
+    hd = d_in // H
+    up = x @ p["w_up"]
+    xi, og = jnp.split(up, 2, axis=-1)
+    og = jax.nn.sigmoid(og)
+    q = (xi @ p["w_q"]).reshape(B, S, H, hd)
+    k = (xi @ p["w_k"]).reshape(B, S, H, hd) / (hd ** 0.5)
+    v = (xi @ p["w_v"]).reshape(B, S, H, hd)
+    gates = xi.astype(jnp.float32) @ p["w_if"] + p["b_if"]  # [B,S,2H]
+    ig, fg = jnp.split(gates, 2, axis=-1)  # log-space input/forget pre-acts
+
+    if state is None:
+        state = init_mlstm_state(cfg, B, d)
+
+    def step(carry, t):
+        C, n, m = carry
+        qt, kt, vt, it, ft = t  # [B,H,hd] x3, [B,H] x2
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        fs = jnp.exp(logf + m - m_new)[..., None]  # [B,H,1]
+        is_ = jnp.exp(it - m_new)[..., None]
+        C = fs[..., None] * C + (is_ * vt)[..., :, None] * kt[..., None, :].astype(jnp.float32)
+        n = fs * n + is_ * kt.astype(jnp.float32)
+        num = jnp.einsum("bhij,bhj->bhi", C, qt.astype(jnp.float32))
+        den = jnp.abs(jnp.einsum("bhj,bhj->bh", n, qt.astype(jnp.float32)))
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), h
+
+    seq = (
+        q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+        ig.swapaxes(0, 1), fg.swapaxes(0, 1),
+    )
+    (C, n, m), hs = jax.lax.scan(step, (state.C, state.n, state.m), seq)
+    h = hs.swapaxes(0, 1).reshape(B, S, d_in).astype(x.dtype)
+    y = (h * og) @ p["w_down"]
+    return y, MLSTMState(C, n, m)
+
+
+def init_mlstm_state(cfg, batch: int, d: int):
+    H = cfg.num_heads
+    hd = int(cfg.xlstm_proj_factor * d) // H
+    return MLSTMState(
+        C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, H, hd), jnp.float32),
+        m=jnp.zeros((batch, H), jnp.float32),
+    )
+
+
+def slstm_init(rng, cfg, d: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    H = cfg.num_heads
+    hd = d // H
+    r = jax.random.split(rng, 4)
+    return {
+        # 4 gates (i, f, z, o) from input, per head
+        "w_x": dense_init(r[0], d, 4 * d, dt),
+        # block-diagonal recurrent weights per head: [H, hd, 4*hd]
+        "w_r": (jax.random.normal(r[1], (H, hd, 4 * hd), jnp.float32) / (hd ** 0.5)).astype(dt),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "w_down": dense_init(r[2], d, d, dt),
+    }
+
+
+def slstm_apply(cfg, p, x, state: SLSTMState | None = None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    if state is None:
+        state = init_slstm_state(cfg, B, d)
+    xg = (x @ p["w_x"]).astype(jnp.float32) + p["b"]  # [B,S,4d]
+    xg = xg.reshape(B, S, H, 4 * hd)
+
+    def step(carry, xt):
+        c, n, h, m = carry  # [B,H,hd] x3, [B,H]
+        rec = jnp.einsum("bhj,hjk->bhk", h.astype(p["w_r"].dtype), p["w_r"]).astype(jnp.float32)
+        g = xt + rec  # [B,H,4hd]
+        it, ft, zt, ot = jnp.split(g, 4, axis=-1)
+        # scalar-per-head stabilized exponential gating (mean over hd pre-acts)
+        il = jnp.mean(it, axis=-1)
+        fl = jax.nn.log_sigmoid(jnp.mean(ft, axis=-1))
+        m_new = jnp.maximum(fl + m, il)
+        i_ = jnp.exp(il - m_new)[..., None]
+        f_ = jnp.exp(fl + m - m_new)[..., None]
+        c = f_ * c + i_ * jnp.tanh(zt)
+        n = f_ * n + i_
+        h_new = jax.nn.sigmoid(ot) * (c / jnp.maximum(n, 1e-6))
+        return (c, n, h_new, m_new), h_new
+
+    (c, n, h, m), hs = jax.lax.scan(
+        step, (state.c, state.n, state.h, state.m), xg.swapaxes(0, 1)
+    )
+    y = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype) @ p["w_down"]
+    return y, SLSTMState(c, n, h, m)
+
+
+def init_slstm_state(cfg, batch: int, d: int):
+    H = cfg.num_heads
+    hd = d // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return SLSTMState(c=z, n=z + 1e-6, h=z, m=jnp.zeros((batch, H), jnp.float32))

@@ -1,0 +1,71 @@
+"""Optimizers as pytree transforms (no optax in this container).
+
+The paper's local/global steps use plain SGD with fixed eta; momentum/adam
+serve the non-federated trainer substrate and beyond-paper extensions.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, state, params) -> (new_params, state)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        new = jax.tree.map(
+            lambda w, g: (w.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(w.dtype),
+            params, grads,
+        )
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+    def update(grads, state, params):
+        m = jax.tree.map(lambda mi, g: beta * mi + g.astype(jnp.float32), state, grads)
+        new = jax.tree.map(
+            lambda w, mi: (w.astype(jnp.float32) - lr * mi).astype(w.dtype), params, m
+        )
+        return new, m
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.copy, z), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(w, mi, vi):
+            step = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            if weight_decay:
+                step = step + lr * weight_decay * w.astype(jnp.float32)
+            return (w.astype(jnp.float32) - step).astype(w.dtype)
+
+        new = jax.tree.map(upd, params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)

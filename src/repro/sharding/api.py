@@ -1,0 +1,94 @@
+"""Logical-axis activation sharding.
+
+Model code calls ``constrain(x, "batch", None, "ff")`` with *logical* axis
+names; a context (installed by the launcher / dry-run around the jitted
+function) maps logical names to mesh axes, dropping any mapping whose mesh
+axes do not evenly divide the corresponding array dimension (divisibility-
+aware fallback-to-replicate, see DESIGN.md §6). Outside any context this is
+a no-op, so tests and single-device smoke runs never touch device state.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "client": ("pod", "data"),
+    "ff": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "vocab": "model",
+    "experts": "model",
+    "embed": None,
+    "seq": None,
+    "kv_seq": None,
+}
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mesh: Mesh, rules: Optional[Dict[str, MeshAxes]] = None):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, dict(DEFAULT_RULES, **(rules or {})))
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def _mesh_axes_for(name, rules, mesh) -> Tuple[str, ...]:
+    ax = rules.get(name) if name else None
+    if ax is None:
+        return ()
+    if isinstance(ax, str):
+        ax = (ax,)
+    return tuple(a for a in ax if a in mesh.shape)
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]]) -> Optional[P]:
+    """Resolve logical axes -> PartitionSpec for a concrete shape (or None)."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    out, used = [], set()
+    for dim, name in zip(shape, logical):
+        axes = tuple(a for a in _mesh_axes_for(name, rules, mesh) if a not in used)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        if axes and total > 1 and dim % total == 0:
+            out.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op w/o a context."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    if len(logical) != x.ndim:
+        # final logical name applies to the last dims; pad front with None
+        logical = (None,) * (x.ndim - len(logical)) + tuple(logical)
+    spec = spec_for(x.shape, logical)
+    if spec is None or all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,203 @@
+"""Parameter partitioning rules: pytree path -> PartitionSpec.
+
+Megatron-style tensor parallel on the `model` axis, divisibility-aware
+(shard-or-replicate; never uneven argument shardings — DESIGN.md §6):
+
+  * embeddings / LM head: vocab-parallel;
+  * attention: QKV output-parallel, O input-parallel;
+  * MLP: d_ff-parallel both mats;
+  * MoE experts [E, d, f]: expert-parallel on E when E % model == 0,
+    else fall back to d_ff-parallel (e.g. qwen2's 60 experts on 16);
+  * SSM: channel-parallel on d_in (state recurrence is elementwise in
+    channels, so the scan shards cleanly);
+  * xLSTM: d_in-parallel on the up/down projections; per-head recurrent
+    mats (H=4 < axis) stay replicated — documented model-axis idle work
+    for the ssm family (see EXPERIMENTS.md roofline notes).
+
+The federated round adds a leading client axis to every leaf; client_spec()
+prepends the ('pod','data') sharding for it.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, *names: str) -> int:
+    n = 1
+    for a in names:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+# weight-name classes
+_COL_PARALLEL = {  # 2D [in, out]: shard out (last dim)
+    "w_q", "w_k", "w_v", "w_gate", "w_up", "w_in", "w_x", "lm_head",
+}
+_ROW_PARALLEL = {  # 2D [in, out]: shard in (first dim)
+    "w_o", "w_down", "w_out",
+}
+_SHARD_DIM0_VEC = {  # 1D vectors living in the sharded feature space
+    "b_q", "b_k", "b_v", "b_up", "dt_bias", "D",
+}
+
+
+def leaf_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    m = _axis_size(mesh, "model")
+    name = path.split("/")[-1]
+
+    def ok(dim: int) -> bool:
+        return m > 1 and dim < len(shape) and shape[dim] % m == 0
+
+    if m <= 1:
+        return P()
+
+    # --- embeddings: d_model-parallel (dim 1) ------------------------------
+    # NOT vocab-parallel: a vocab-sharded gather trips an XLA SPMD
+    # partitioner CHECK (PartitionGather index-passthrough) in this jaxlib;
+    # sharding the feature dim keeps the gather pass-through and the LM-head
+    # matmul still produces vocab-sharded logits via the unembed constraint.
+    if name in ("embed", "pos_embed", "enc_pos"):
+        return P(None, "model" if ok(1) else None)
+
+    # --- MoE expert stacks [E, d, f] ---------------------------------------
+    if len(shape) == 3 and name in ("w_gate", "w_up", "w_down"):
+        if ok(0):
+            return P("model", None, None)  # expert parallel
+        if name == "w_down":  # [E, f, d]
+            return P(None, "model" if ok(1) else None, None)
+        return P(None, None, "model" if ok(2) else None)
+
+    # --- xLSTM per-head recurrent mats [H, hd, 4hd]: replicated ------------
+    if name == "w_r":
+        return P(None, None, None)
+
+    if len(shape) == 2:
+        if name in _COL_PARALLEL:
+            return P(None, "model" if ok(1) else None)
+        if name in _ROW_PARALLEL:
+            return P("model" if ok(0) else None, None)
+        if name in ("conv_w",):  # [K, d_in]
+            return P(None, "model" if ok(1) else None)
+        if name in ("w_bc", "w_dt", "A_log"):  # [d_in, *]
+            return P("model" if ok(0) else None, None)
+        if name in ("w_if", "router", "frame_proj", "vision_proj", "fc1", "fc2", "w", "b"):
+            return P(None, None)
+        return P(*([None] * len(shape)))
+
+    if len(shape) == 1 and name in _SHARD_DIM0_VEC:
+        return P("model" if ok(0) else None)
+
+    return P(*([None] * len(shape)))
+
+
+def param_specs(params: Any, mesh: Mesh, leading: Tuple[str, ...] = ()) -> Any:
+    """PartitionSpec pytree for a parameter pytree.
+
+    `leading`: logical mesh axes prepended for stacked leading dims (e.g.
+    the client axis of the federated round). Layer-stack leading dims
+    (scan) are detected by path ('layers', 'enc_layers', 'xlstm', ...) and
+    mapped to None.
+    """
+
+    def spec_one(path, leaf):
+        pstr = _path_str(path)
+        shape = leaf.shape
+        nlead = len(leading)
+        # stacked-layer axes: any number of leading dims added by `stacked`
+        # reshapes; we compute the rule on the trailing "logical" dims.
+        rule_src = {
+            "layers": 1, "enc_layers": 1, "dec_layers": 1,
+        }
+        extra = 0
+        parts = pstr.split("/")
+        if any(s in parts for s in ("layers", "enc_layers", "dec_layers")):
+            extra = 1
+        if "xlstm" in parts:
+            extra = 2  # [n_super, n_per_super, ...]
+        base = leaf_spec(pstr, shape[nlead + extra:], mesh)
+        lead: Tuple = tuple(leading) if nlead else ()
+        if nlead:
+            # verify divisibility of the client axis
+            csz = _axis_size(mesh, *(a for grp in leading for a in
+                                     (grp if isinstance(grp, tuple) else (grp,))))
+            if shape[0] % csz != 0:
+                lead = (None,)
+        return P(*lead, *([None] * extra), *tuple(base))
+
+    return jax.tree_util.tree_map_with_path(spec_one, params)
+
+
+def named_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(batch: Any, mesh: Mesh, batch_axes=("pod", "data")) -> Any:
+    """Shard the leading (batch or client) dim of every batch leaf."""
+    axes = tuple(a for a in batch_axes if a in mesh.shape)
+    n = _axis_size(mesh, *axes)
+
+    def one(leaf):
+        if leaf.ndim == 0 or n <= 1 or leaf.shape[0] % n != 0:
+            return P(*([None] * leaf.ndim))
+        return P(axes if len(axes) > 1 else axes[0], *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_specs(cache: Any, mesh: Mesh, kv_seq_shard: bool = False) -> Any:
+    """Decode-cache sharding: batch dim on ('pod','data'), kv-heads on model.
+
+    Cache leaves are layer-stacked: kv [L, B, W, Hkv, hd]; ssm [L, B, ...];
+    xlstm [n_super, n_per, B, ...]. We shard the first dim that divides the
+    data axes (the batch dim) and, for kv, the head dim on model if
+    divisible; long_500k (batch 1) falls back to sequence sharding of the
+    cache window on the data axes.
+    """
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dn = _axis_size(mesh, *daxes)
+    m = _axis_size(mesh, "model")
+    dspec = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 3:
+            # find batch dim: kv/ssm stacked -> dim 1; xlstm stacked -> dim 2
+            bdim = 1
+            if leaf.ndim >= 4 and leaf.shape[0] < 16 and leaf.shape[1] < 16:
+                bdim = 2 if leaf.shape[2] % max(dn, 1) == 0 and leaf.shape[1] <= 8 else 1
+            if dn > 1 and leaf.shape[bdim] % dn == 0:
+                spec[bdim] = dspec
+            elif dn > 1 and leaf.ndim >= 5 and leaf.shape[2] % dn == 0:
+                spec[2] = dspec  # sequence-shard the cache window (batch=1)
+            if leaf.ndim >= 5 and m > 1 and leaf.shape[3] % m == 0:
+                spec[3] = "model"  # kv heads
+            elif (kv_seq_shard and leaf.ndim >= 5 and m > 1
+                  and spec[2] is None and leaf.shape[2] % m == 0):
+                # heads don't divide the model axis (e.g. qwen's 40 on 16):
+                # shard the cache LENGTH instead — attention softmax/V
+                # reductions over a sharded length cost only [B,H]-sized
+                # all-reduces vs all-gathering the full cache (§Perf)
+                spec[2] = "model"
+            elif (kv_seq_shard and leaf.ndim == 3 and m > 1
+                  and spec[2] is None and leaf.shape[2] % m == 0):
+                spec[2] = "model"  # slot-position leaf rides along
+        return P(*spec)
+
+    return jax.tree.map(one, cache)

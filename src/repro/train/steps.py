@@ -1,0 +1,224 @@
+"""Distributed step builders: FedVeca round / SGD train / prefill / decode.
+
+Each builder returns (jitted_fn, make_inputs) where make_inputs() yields
+ShapeDtypeStructs (dry-run) — the launcher substitutes real arrays of the
+same shape. Shardings come from sharding/partition.py rules over the mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.fedveca import make_round_step
+from repro.launch.mesh import num_clients
+from repro.sharding.api import logical_axis_rules
+from repro.sharding.partition import (
+    batch_specs,
+    cache_specs,
+    named_shardings,
+    param_specs,
+)
+
+
+class StepBundle(NamedTuple):
+    fn: Any  # jitted callable
+    make_inputs: Callable[[], tuple]  # ShapeDtypeStructs in call order
+    name: str
+
+
+def _ns(mesh, spec):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def params_struct(model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# FedVeca federated round at scale (the paper's technique — train_4k)
+# ---------------------------------------------------------------------------
+
+
+def make_fedveca_round_bundle(
+    model, mesh: Mesh, shape: ShapeConfig, *, tau_max: int = 2,
+    eta: float = 1e-3, mode: str = "fedveca", stat_dtype=jnp.float32,
+    unroll: int = 1, unroll_tau: bool = False,
+    remat="keep",  # "keep" = model default (True); True | False | "dots"
+    fed_batch_rules: str = "client_exclusive",  # default flipped after the
+    #   §Perf iterations confirmed client_exclusive removes replicated
+    #   per-client compute + reshard collectives (2.6x memory, 4x collective
+    #   on starcoder2 train_4k); "data" reproduces the recorded baselines
+) -> StepBundle:
+    cfg: ArchConfig = model.config
+    C = num_clients(mesh)
+    assert shape.global_batch % C == 0, (shape.global_batch, C)
+    b = shape.global_batch // C
+
+    lkw = {}
+    if cfg.family != "toy":
+        if unroll != 1:
+            lkw["unroll"] = unroll
+        if remat != "keep":
+            lkw["remat"] = remat
+    loss = model.loss if not lkw else functools.partial(model.loss, **lkw)
+    round_fn = make_round_step(loss, eta=eta, tau_max=tau_max, mode=mode,
+                               unroll_tau=unroll_tau, stat_dtype=stat_dtype)
+
+    # Inside the federated round the mesh data axes are consumed by the
+    # CLIENT dimension; per-client activation batches should NOT claim them
+    # (a "batch"->data constraint inside vmap fights the client sharding).
+    fed_rules = {"batch": None} if fed_batch_rules == "client_exclusive" else {}
+
+    def step(params, batches, tau, p, gprev_sqnorm):
+        with logical_axis_rules(mesh, fed_rules):
+            new_params, stats, _ = round_fn(params, batches, tau, p, gprev_sqnorm)
+        return new_params, stats
+
+    pstruct = params_struct(model)
+    pspec = param_specs(pstruct, mesh)
+    pshard = _ns(mesh, pspec)
+
+    def batch_struct():
+        spec = model.input_specs(shape)
+        # leaves [C, tau_max, b, ...]
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((C, tau_max, b) + s.shape[1:], s.dtype), spec
+        )
+
+    bstruct = batch_struct()
+    bshard = _ns(mesh, batch_specs(bstruct, mesh))
+    scal = _replicated(mesh)
+
+    jit_fn = jax.jit(
+        step,
+        in_shardings=(pshard, bshard, scal, scal, scal),
+        out_shardings=(pshard, None),
+        donate_argnums=(0,),
+    )
+
+    def make_inputs():
+        return (
+            pstruct,
+            bstruct,
+            jax.ShapeDtypeStruct((C,), jnp.int32),
+            jax.ShapeDtypeStruct((C,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+
+    return StepBundle(jit_fn, make_inputs, f"fedveca_round[{mode}]")
+
+
+# ---------------------------------------------------------------------------
+# plain data-parallel SGD train step (centralized baseline at scale)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step_bundle(model, mesh: Mesh, shape: ShapeConfig, *, eta: float = 1e-3,
+                           unroll: int = 1) -> StepBundle:
+    loss = model.loss if (model.config.family == "toy" or unroll == 1) else \
+        functools.partial(model.loss, unroll=unroll)
+
+    def step(params, batch):
+        with logical_axis_rules(mesh):
+            (loss_v, mets), g = jax.value_and_grad(
+                lambda p_, b_: loss(p_, b_), has_aux=True
+            )(params, batch)
+            new = jax.tree.map(
+                lambda w, gg: (w.astype(jnp.float32) - eta * gg.astype(jnp.float32)).astype(w.dtype),
+                params, g,
+            )
+        return new, loss_v
+
+    pstruct = params_struct(model)
+    pshard = _ns(mesh, param_specs(pstruct, mesh))
+    bstruct = model.input_specs(shape)
+    bshard = _ns(mesh, batch_specs(bstruct, mesh))
+    jit_fn = jax.jit(step, in_shardings=(pshard, bshard),
+                     out_shardings=(pshard, None), donate_argnums=(0,))
+    return StepBundle(jit_fn, lambda: (pstruct, bstruct), "train_step[sgd]")
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_bundle(model, mesh: Mesh, shape: ShapeConfig, *, unroll: int = 1) -> StepBundle:
+    def step(params, batch):
+        with logical_axis_rules(mesh):
+            return model.prefill(params, batch, unroll=unroll)
+
+    pstruct = params_struct(model)
+    pshard = _ns(mesh, param_specs(pstruct, mesh))
+    bstruct = model.input_specs(shape)
+    bshard = _ns(mesh, batch_specs(bstruct, mesh))
+    jit_fn = jax.jit(step, in_shardings=(pshard, bshard), out_shardings=None)
+    return StepBundle(jit_fn, lambda: (pstruct, bstruct), "prefill")
+
+
+def make_decode_bundle(model, mesh: Mesh, shape: ShapeConfig, *, unroll: int = 1,
+                       cache_update: str = "mask",
+                       kv_seq_shard: bool = True) -> StepBundle:
+    cfg: ArchConfig = model.config
+    B = shape.global_batch
+
+    dkw = {} if cfg.family == "ssm" else {"cache_update": cache_update}
+
+    def step(params, cache, token, pos):
+        with logical_axis_rules(mesh):
+            return model.decode_step(params, cache, token, pos, unroll=unroll, **dkw)
+
+    pstruct = params_struct(model)
+    pshard = _ns(mesh, param_specs(pstruct, mesh))
+    cstruct = jax.eval_shape(lambda: model.init_cache(B, shape.seq_len))
+    cshard = _ns(mesh, cache_specs(cstruct, mesh, kv_seq_shard=kv_seq_shard))
+    bspec = batch_specs(
+        dict(token=jax.ShapeDtypeStruct((B,), jnp.int32)), mesh
+    )["token"]
+    tshard = NamedSharding(mesh, bspec)
+    jit_fn = jax.jit(
+        step,
+        in_shardings=(pshard, cshard, tshard, tshard),
+        out_shardings=(None, cshard),
+        donate_argnums=(1,),
+    )
+
+    def make_inputs():
+        return (
+            pstruct,
+            cstruct,
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        )
+
+    return StepBundle(jit_fn, make_inputs, "decode_step")
+
+
+def build_bundle(model, mesh: Mesh, shape: ShapeConfig, *, kind: Optional[str] = None,
+                 **kw) -> StepBundle:
+    kind = kind or shape.kind
+    if kind == "train":
+        if model.config.family == "toy" or kw.pop("plain_sgd", False):
+            kw.pop("unroll_tau", None)
+            kw.pop("tau_max", None)
+            return make_train_step_bundle(model, mesh, shape, **kw)
+        return make_fedveca_round_bundle(model, mesh, shape, **kw)
+    if kind == "prefill":
+        return make_prefill_bundle(model, mesh, shape, unroll=kw.get("unroll", 1))
+    if kind == "decode":
+        # defaults flipped post-§Perf: mask update + length-sharded cache
+        # (1600x collective reduction on qwen1.5-32b decode_32k)
+        return make_decode_bundle(model, mesh, shape, unroll=kw.get("unroll", 1),
+                                  cache_update=kw.get("cache_update", "mask"),
+                                  kv_seq_shard=kw.get("kv_seq_shard", True))
+    raise ValueError(kind)

@@ -1,0 +1,15 @@
+"""Test helpers: batch builders for the model zoo."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def lm_batch(cfg, B=2, S=16, seed=0, with_targets=True):
+    r = np.random.RandomState(seed)
+    batch = {"tokens": jnp.asarray(r.randint(0, min(cfg.vocab_size, 100), (B, S)), jnp.int32)}
+    if with_targets:
+        batch["targets"] = jnp.asarray(r.randint(0, min(cfg.vocab_size, 100), (B, S)), jnp.int32)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(r.randn(B, cfg.encoder_seq, cfg.frontend_dim), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(r.randn(B, cfg.num_patches, cfg.vision_dim), jnp.float32)
+    return batch

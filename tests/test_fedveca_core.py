@@ -1,0 +1,169 @@
+"""FedVeca core correctness: vectorized round vs the literal Alg. 1/2
+reference, baseline-mode algebra, and controller behaviour.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import reference_round
+from repro.core.controller import ControllerConfig, FedVecaController
+from repro.core.fedveca import RoundStats, make_round_step
+from repro.core.tree import tree_sqnorm
+from repro.models.model import build_model_by_name
+
+
+@pytest.fixture(scope="module")
+def svm():
+    return build_model_by_name("svm-mnist")
+
+
+def _batches(C, tau_max, b, seed=0):
+    r = np.random.RandomState(seed)
+    return dict(
+        x=jnp.asarray(r.randn(C, tau_max, b, 784), jnp.float32),
+        y=jnp.asarray(r.randint(0, 2, (C, tau_max, b)), jnp.int32),
+    )
+
+
+def test_vectorized_round_matches_reference(svm):
+    params = svm.init(jax.random.PRNGKey(0))
+    C, tau_max, b = 3, 5, 8
+    batches = _batches(C, tau_max, b)
+    tau = jnp.array([5, 2, 3], jnp.int32)
+    p = jnp.array([0.5, 0.2, 0.3], jnp.float32)
+    step = jax.jit(make_round_step(svm.loss, eta=0.01, tau_max=tau_max))
+    new_p, stats, _ = step(params, batches, tau, p, jnp.float32(0.05))
+    ref_p, ref = reference_round(
+        svm.loss, params, batches, np.asarray(tau), np.asarray(p), 0.01, 0.05
+    )
+    for k in new_p:
+        np.testing.assert_allclose(np.asarray(new_p[k]), np.asarray(ref_p[k]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(stats.beta), ref["beta"], rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(stats.delta), ref["delta"], rtol=1e-3, atol=1e-5)
+    assert abs(float(stats.tau_k) - ref["tau_k"]) < 1e-5
+
+
+def test_single_client_fednova_equals_sequential_sgd(svm):
+    """With C=1, the normalized round is exactly tau plain SGD steps."""
+    params = svm.init(jax.random.PRNGKey(1))
+    tau_max = 4
+    batches = _batches(1, tau_max, 8, seed=3)
+    step = jax.jit(make_round_step(svm.loss, eta=0.02, tau_max=tau_max, mode="fednova"))
+    new_p, _, _ = step(
+        params, batches, jnp.array([tau_max]), jnp.array([1.0]), jnp.float32(0.0)
+    )
+    # sequential SGD
+    g = jax.grad(lambda p, b: svm.loss(p, b)[0])
+    seq = params
+    for l in range(tau_max):
+        bl = jax.tree.map(lambda x: x[0][l], batches)
+        seq = jax.tree.map(lambda w, gg: w - 0.02 * gg, seq, g(seq, bl))
+    for k in new_p:
+        np.testing.assert_allclose(np.asarray(new_p[k]), np.asarray(seq[k]), atol=1e-6)
+
+
+def test_fedavg_equals_fednova_for_equal_taus(svm):
+    """FedNova's normalization is a no-op when every tau_i is equal (Eq. 4/5)."""
+    params = svm.init(jax.random.PRNGKey(2))
+    C, tau_max = 4, 3
+    batches = _batches(C, tau_max, 4, seed=5)
+    tau = jnp.full((C,), 3, jnp.int32)
+    p = jnp.array([0.3, 0.3, 0.2, 0.2], jnp.float32)
+    outs = {}
+    for mode in ("fedavg", "fednova"):
+        step = jax.jit(make_round_step(svm.loss, eta=0.01, tau_max=tau_max, mode=mode))
+        outs[mode], _, _ = step(params, batches, tau, p, jnp.float32(0.0))
+    for k in outs["fedavg"]:
+        np.testing.assert_allclose(
+            np.asarray(outs["fedavg"][k]), np.asarray(outs["fednova"][k]), atol=1e-6
+        )
+
+
+def test_masked_steps_are_noops(svm):
+    """tau_i=2 with tau_max=6 must equal tau_i=2 with tau_max=2 exactly."""
+    params = svm.init(jax.random.PRNGKey(3))
+    C, b = 2, 4
+    big = _batches(C, 6, b, seed=7)
+    small = jax.tree.map(lambda x: x[:, :2], big)
+    tau = jnp.array([2, 2], jnp.int32)
+    p = jnp.array([0.5, 0.5], jnp.float32)
+    s_big = jax.jit(make_round_step(svm.loss, eta=0.01, tau_max=6))
+    s_small = jax.jit(make_round_step(svm.loss, eta=0.01, tau_max=2))
+    p_big, st_big, _ = s_big(params, big, tau, p, jnp.float32(0.1))
+    p_small, st_small, _ = s_small(params, small, tau, p, jnp.float32(0.1))
+    for k in p_big:
+        np.testing.assert_allclose(np.asarray(p_big[k]), np.asarray(p_small[k]), atol=1e-7)
+    np.testing.assert_allclose(np.asarray(st_big.beta), np.asarray(st_small.beta), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st_big.delta), np.asarray(st_small.delta), atol=1e-6)
+
+
+def test_fedprox_and_scaffold_run(svm):
+    params = svm.init(jax.random.PRNGKey(4))
+    batches = _batches(2, 3, 4)
+    tau = jnp.array([3, 2], jnp.int32)
+    p = jnp.array([0.5, 0.5], jnp.float32)
+    for mode, kw in [("fedprox", dict(mu=0.1)), ("scaffold", {})]:
+        step = jax.jit(make_round_step(svm.loss, eta=0.01, tau_max=3, mode=mode, **kw))
+        new_p, stats, scaf = step(params, batches, tau, p, jnp.float32(0.0))
+        assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(new_p))
+        if mode == "scaffold":
+            assert scaf is not None
+            assert float(tree_sqnorm(scaf.c)) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# controller
+# ---------------------------------------------------------------------------
+
+
+def _fake_stats(beta, delta, tau, global_grad, tau_k=None, upd=0.01):
+    beta = jnp.asarray(beta, jnp.float32)
+    C = beta.shape[0]
+    return RoundStats(
+        loss0=jnp.zeros((C,)),
+        beta=beta,
+        delta=jnp.asarray(delta, jnp.float32),
+        g0_sqnorm=jnp.ones((C,)),
+        tau=jnp.asarray(tau, jnp.int32),
+        tau_k=jnp.float32(tau_k if tau_k is not None else float(np.mean(tau))),
+        global_grad=global_grad,
+        update_sqnorm=jnp.float32(upd),
+        params_sqnorm=jnp.float32(4.0),
+    )
+
+
+def test_controller_tau_bounds_and_direction():
+    cfg = ControllerConfig(eta=0.01, alpha=0.95, tau_max=50)
+    ctl = FedVecaController(cfg, 3)
+    state = ctl.init_state()
+    gg = {"w": jnp.ones((4,))}
+    # round 0: no prediction yet
+    state, tau, diag = ctl.update(state, _fake_stats([0, 0, 0], [0, 0, 0], [2, 2, 2], gg))
+    assert list(tau) == [2, 2, 2]
+    # round 1: A = eta * beta^2 * delta; client 0 has min A -> largest tau
+    state, tau, diag = ctl.update(
+        state, _fake_stats([1.0, 2.0, 4.0], [1.0, 1.0, 1.0], [2, 2, 2], gg)
+    )
+    assert tau.min() >= cfg.tau_min and tau.max() <= cfg.tau_max
+    assert tau[0] >= tau[1] >= tau[2]  # smaller drift A -> more local steps
+    assert diag["L"] > 0
+    # Eq. (14) check: predicted taus satisfy the Theorem-2 bound
+    A = diag["A"]
+    alpha_k = diag["alpha_k"]
+    bound = A / (A - alpha_k * A.min())
+    assert np.all(tau[bound > 0] <= np.maximum(np.floor(bound[bound > 0]), 2))
+
+
+def test_controller_L_is_monotone_max():
+    cfg = ControllerConfig(eta=0.1, alpha=0.9, tau_max=20)
+    ctl = FedVecaController(cfg, 2)
+    state = ctl.init_state()
+    Ls = []
+    for k, scale in enumerate([1.0, 2.0, 0.5, 0.1]):
+        gg = {"w": jnp.array([scale, 0.0])}
+        state, tau, diag = ctl.update(
+            state, _fake_stats([1, 1], [1, 1], [2, 2], gg, upd=0.02 * (k + 1))
+        )
+        Ls.append(diag["L"])
+    assert all(b >= a - 1e-12 for a, b in zip(Ls, Ls[1:]))

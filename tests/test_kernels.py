@@ -1,0 +1,111 @@
+"""Pallas kernel sweeps: shapes x dtypes, allclose against ref.py oracles
+(kernels run in interpret mode on CPU; TPU is the compile target).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.rmsnorm import ops as rn_ops
+from repro.kernels.rmsnorm import ref as rn_ref
+from repro.kernels.vecavg import ops as va_ops
+from repro.kernels.vecavg import ref as va_ref
+
+
+@pytest.mark.parametrize("C,D", [(2, 64), (5, 513), (16, 2048), (32, 100)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_vecavg_matches_ref(C, D, dtype):
+    r = np.random.RandomState(C * 100 + D)
+    u = jnp.asarray(r.randn(C, D), dtype)
+    p = jnp.asarray(np.abs(r.rand(C)) + 0.1, jnp.float32)
+    p = p / p.sum()
+    dw, sqn = va_ops.vecavg(u, p, 0.73, block_d=128)
+    dw_r, sqn_r = va_ref.vecavg(u, p, 0.73)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(dw, np.float32), np.asarray(dw_r, np.float32), atol=tol, rtol=tol
+    )
+    np.testing.assert_allclose(np.asarray(sqn), np.asarray(sqn_r), rtol=1e-4)
+
+
+def test_vecavg_tree_roundtrip():
+    r = np.random.RandomState(0)
+    C = 4
+    tree = {
+        "a": jnp.asarray(r.randn(C, 8, 16), jnp.float32),
+        "b": {"w": jnp.asarray(r.randn(C, 33), jnp.float32)},
+    }
+    p = jnp.full((C,), 0.25, jnp.float32)
+    out, sqn = va_ops.vecavg_tree(tree, p, 1.5)
+    ref_flat = {
+        k: va_ref.vecavg(v.reshape(C, -1), p, 1.5)[0].reshape(v.shape[1:])
+        for k, v in [("a", tree["a"]), ("w", tree["b"]["w"])]
+    }
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(ref_flat["a"]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out["b"]["w"]), np.asarray(ref_flat["w"]), atol=1e-6)
+    assert sqn.shape == (C,)
+
+
+@pytest.mark.parametrize(
+    "B,Sq,Sk,Hq,Hkv,hd,causal,window,qoff",
+    [
+        (1, 128, 128, 4, 2, 32, True, 0, 0),
+        (2, 200, 200, 4, 4, 16, True, 64, 0),
+        (1, 64, 256, 2, 1, 32, True, 0, 192),  # decode-chunk with offset
+        (2, 128, 128, 8, 2, 64, False, 0, 0),
+        (1, 257, 257, 2, 2, 128, True, 100, 0),  # ragged block edges
+    ],
+)
+def test_flash_attention_matches_ref(B, Sq, Sk, Hq, Hkv, hd, causal, window, qoff):
+    r = np.random.RandomState(Sq + Sk)
+    q = jnp.asarray(r.randn(B, Sq, Hq, hd), jnp.float32)
+    k = jnp.asarray(r.randn(B, Sk, Hkv, hd), jnp.float32)
+    v = jnp.asarray(r.randn(B, Sk, Hkv, hd), jnp.float32)
+    o = fa_ops.flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=qoff, block_q=64, block_k=64
+    )
+    o_ref = fa_ref.attention(q, k, v, causal=causal, window=window, q_offset=qoff)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    r = np.random.RandomState(7)
+    q = jnp.asarray(r.randn(1, 96, 4, 32), dtype)
+    k = jnp.asarray(r.randn(1, 96, 2, 32), dtype)
+    v = jnp.asarray(r.randn(1, 96, 2, 32), dtype)
+    o = fa_ops.flash_attention(q, k, v, block_q=32, block_k=32)
+    o_ref = fa_ref.attention(q, k, v)
+    assert o.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref, np.float32), atol=3e-2
+    )
+
+
+def test_flash_attention_is_model_attention():
+    """The kernel plugs into attention_block via impl='pallas'."""
+    from repro.models.model import build_model_by_name
+    from helpers import lm_batch
+
+    model = build_model_by_name("starcoder2-3b", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = lm_batch(model.config, 2, 64)
+    l1, _ = model.forward(params, batch, impl="pallas")
+    l2, _ = model.forward(params, batch, impl="direct")
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", [(4, 7, 128), (1000, 256), (3, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    r = np.random.RandomState(sum(shape))
+    x = jnp.asarray(r.randn(*shape), dtype)
+    s = jnp.asarray(r.randn(shape[-1]) * 0.1, jnp.float32)
+    o = rn_ops.rmsnorm(x, s)
+    o_ref = rn_ref.rmsnorm(x, s)
+    assert o.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref, np.float32), atol=1e-5
+    )

@@ -1,0 +1,121 @@
+"""Integration: the federated simulator reproduces the paper's qualitative
+claims at test scale, plus substrate tests (checkpoint, optimizers,
+prototype message-passing path).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.partition import partition_case3, partition_iid
+from repro.data.synthetic import Dataset, binarize_even_odd, make_classification
+from repro.fed.simulator import FederatedSimulator, FedSimConfig, centralized_sgd, fair_fixed_tau
+from repro.models.model import build_model_by_name
+
+
+@pytest.fixture(scope="module")
+def svm_setup():
+    orig = make_classification(2000, (784,), 10, seed=0)
+    train = binarize_even_odd(orig)
+    test = binarize_even_odd(make_classification(500, (784,), 10, seed=1))
+    parts = partition_case3(orig.y, 5, seed=0)
+    clients = [Dataset(train.x[s], train.y[s]) for s in parts]
+    model = build_model_by_name("svm-mnist")
+    return model, clients, test
+
+
+def test_fedveca_converges_and_adapts(svm_setup):
+    model, clients, test = svm_setup
+    cfg = FedSimConfig(mode="fedveca", rounds=10, tau_max=8, batch_size=16, eta=0.05)
+    log = FederatedSimulator(model, clients, cfg, test).run()
+    losses = log.column("train_loss")
+    assert losses[-1] < losses[0] * 0.7  # converging
+    taus = np.stack(log.column("tau"))
+    assert taus.min() >= 2 and taus.max() <= 8
+    assert (taus.std(axis=1) > 0).any()  # taus actually adapt across clients
+    assert np.isfinite(log.column("test_loss")[-1])
+
+
+def test_fedveca_beats_fedavg_on_noniid(svm_setup):
+    """The paper's headline claim at smoke scale (Case 3)."""
+    model, clients, test = svm_setup
+    R = 12
+    cfg = FedSimConfig(mode="fedveca", rounds=R, tau_max=8, batch_size=16, eta=0.05, seed=1)
+    veca = FederatedSimulator(model, clients, cfg, test).run()
+    sizes = np.array([len(c) for c in clients], float)
+    ft = np.minimum(fair_fixed_tau(veca.tau_all, R, 16, sizes), 8)
+    avg_cfg = FedSimConfig(mode="fedavg", rounds=R, tau_max=8, batch_size=16,
+                           eta=0.05, seed=1, fixed_tau=ft)
+    avg = FederatedSimulator(model, clients, avg_cfg, test).run()
+    assert veca.rows[-1]["test_loss"] <= avg.rows[-1]["test_loss"] + 0.02
+
+
+def test_premise_logged(svm_setup):
+    model, clients, test = svm_setup
+    cfg = FedSimConfig(mode="fedveca", rounds=5, tau_max=6, batch_size=16, eta=0.05)
+    log = FederatedSimulator(model, clients, cfg, test).run()
+    premise = log.column("premise")
+    assert np.isfinite(premise[2:]).all()  # defined after L estimation starts
+
+
+def test_all_modes_run(svm_setup):
+    model, clients, test = svm_setup
+    for mode in ("fednova", "fedprox", "scaffold"):
+        cfg = FedSimConfig(mode=mode, rounds=3, tau_max=4, batch_size=8, eta=0.05,
+                           fixed_tau=np.array([4, 2, 3, 2, 4]))
+        log = FederatedSimulator(model, clients, cfg, test).run()
+        assert np.isfinite(log.rows[-1]["train_loss"])
+
+
+def test_centralized_baseline(svm_setup):
+    model, clients, test = svm_setup
+    pooled = Dataset(
+        np.concatenate([c.x for c in clients]), np.concatenate([c.y for c in clients])
+    )
+    params, mets = centralized_sgd(model, pooled, 100, 32, 0.05, test)
+    assert mets["test_acc"] > 0.55
+
+
+def test_prototype_matches_semantics(svm_setup):
+    """Message-passing Alg. 1/2 runs and counts wire bytes."""
+    from repro.fed.prototype import FedVecaClient, FedVecaServer
+
+    model, clients, _ = svm_setup
+    cs = [FedVecaClient(i, model, d, batch_size=8, eta=0.05) for i, d in enumerate(clients)]
+    p = np.array([len(d) for d in clients], float)
+    p /= p.sum()
+    srv = FedVecaServer(model, cs, p, eta=0.05, tau_max=6)
+    srv.run(3)
+    assert srv.bytes_sent > 0 and srv.bytes_recv > 0
+    assert len(srv.history) == 3
+    assert np.all(srv.taus >= 2)
+
+
+def test_checkpoint_roundtrip(tmp_path, svm_setup):
+    from repro.checkpoint.io import restore, save
+
+    model, clients, _ = svm_setup
+    params = model.init(jax.random.PRNGKey(0))
+    meta = {"round": 7, "tau": [2, 3, 4]}
+    save(str(tmp_path / "ck"), params, meta)
+    params2, meta2 = restore(str(tmp_path / "ck"), jax.tree.map(jnp.zeros_like, params))
+    assert meta2["round"] == 7
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(params[k]), np.asarray(params2[k]))
+
+
+def test_optimizers_descend():
+    from repro.optim import adam, momentum, sgd
+
+    def quad(p):
+        return jnp.sum(jnp.square(p["w"] - 3.0))
+
+    for opt in (sgd(0.1), momentum(0.05), adam(0.2)):
+        params = {"w": jnp.zeros((4,))}
+        state = opt.init(params)
+        for _ in range(50):
+            g = jax.grad(quad)(params)
+            params, state = opt.update(g, state, params)
+        assert quad(params) < 0.2
