@@ -1,0 +1,16 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test ci smoke bench-round-engine
+
+test:
+	python -m pytest -x -q
+
+smoke:
+	python examples/quickstart.py --rounds 3
+
+ci:
+	bash scripts/ci.sh
+
+bench-round-engine:
+	python -m benchmarks.run --only round_engine

@@ -1,0 +1,170 @@
+"""RoundEngine data-path benchmark at C in {8, 32, 128} on the CNN config.
+
+Two series, both host-batched (the seed's per-round numpy sampling + whole
+[C, tau_max, b, ...] upload) vs device-resident (shards live on device,
+minibatch indices drawn inside the jitted program):
+
+  * ``datapath``: the data pipeline in isolation — sample + deliver one
+    round's batches to a jitted consumer that touches every byte. This is
+    the part the two paths actually differ on, and on CPU it is the only
+    honest comparison: the paper CNN's fwd+bwd costs ~24 ms/image on this
+    container vs ~0.03 ms/image of batch building, so a full round is
+    >99% identical compute in both paths and its timing jitter (~7%)
+    swamps the delta.
+  * ``e2e_round``: full federated CNN rounds/sec (tau_max=1, b=2 keeps a
+    round sub-2s so several can be timed), for the end-to-end context of
+    the datapath numbers.
+
+    PYTHONPATH=src python -m benchmarks.run --only round_engine
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import EngineConfig, RoundEngine
+from repro.data.device import DeviceShards, host_stacked_batches
+from repro.data.partition import partition_iid
+from repro.data.synthetic import Dataset, make_classification
+from repro.models.model import build_model_by_name
+
+N_PER_CLIENT = 256
+DATA_TAU, DATA_B = 2, 8  # datapath series: the simulator's historical shapes
+E2E_TAU, E2E_B = 1, 2  # e2e series: keep a CPU CNN round small enough to time
+
+
+def _bench_clients(C: int):
+    n = C * N_PER_CLIENT
+    data = make_classification(n, (28, 28, 1), 10, seed=C, sep=0.8, noise=0.5)
+    parts = partition_iid(n, C, seed=0)
+    return [Dataset(data.x[s], data.y[s]) for s in parts]
+
+
+# ---------------------------------------------------------------------------
+# datapath: sample one round's batches and touch every byte, nothing else
+# ---------------------------------------------------------------------------
+
+
+def _bench_datapath(clients, C, iters=30):
+    shards = DeviceShards.from_datasets(clients)
+
+    @jax.jit
+    def consume(batches):
+        return jnp.float32(0) + sum(
+            jnp.sum(x.astype(jnp.float32)) for x in jax.tree.leaves(batches)
+        )
+
+    @jax.jit
+    def device_round(data, key):
+        return consume(shards.sample(data, key, DATA_TAU, DATA_B))
+
+    rng = np.random.RandomState(0)
+    data = shards.tree()
+
+    def host_once(i):
+        return consume(host_stacked_batches(clients, rng, DATA_TAU, DATA_B))
+
+    def device_once(i):
+        return device_round(data, jax.random.fold_in(jax.random.PRNGKey(0), i))
+
+    fns = dict(host_batched=host_once, device_resident=device_once)
+    total = {name: 0.0 for name in fns}
+    for fn in fns.values():  # compile + warmup
+        jax.block_until_ready(fn(0))
+    # interleave the two paths so slow machine drift cancels out
+    for i in range(iters):
+        for name, fn in fns.items():
+            t0 = time.time()
+            jax.block_until_ready(fn(i + 1))
+            total[name] += time.time() - t0
+    return {name: 1e6 * t / iters for name, t in total.items()}
+
+
+# ---------------------------------------------------------------------------
+# e2e: full federated rounds through the engine
+# ---------------------------------------------------------------------------
+
+
+def _bench_e2e(model, clients, C, rounds):
+    tau = np.full(C, E2E_TAU, np.int32)
+    p = np.full(C, 1.0 / C, np.float32)
+    cfg = EngineConfig(mode="fedveca", eta=0.01, tau_max=E2E_TAU, batch_size=E2E_B)
+
+    state = {}
+    for name in ("host_batched", "device_resident"):
+        host = name == "host_batched"
+        eng = RoundEngine(
+            model.loss, cfg,
+            shards=None if host else DeviceShards.from_datasets(clients),
+            num_clients=C,
+        )
+        state[name] = dict(
+            eng=eng, host=host, params=model.init(jax.random.PRNGKey(0)),
+            rng=np.random.RandomState(0), key=jax.random.PRNGKey(0), total=0.0,
+        )
+
+    def one_round(s):
+        s["key"], sub = jax.random.split(s["key"])
+        batches = (
+            host_stacked_batches(clients, s["rng"], E2E_TAU, E2E_B)
+            if s["host"] else None
+        )
+        s["params"], _, _ = s["eng"].run_round(
+            s["params"], tau, p, 0.0, key=sub, batches=batches
+        )
+
+    for s in state.values():  # compile + warmup
+        one_round(s)
+        jax.block_until_ready(s["params"])
+    # interleave the two paths so slow machine drift cancels out
+    for _ in range(rounds):
+        for s in state.values():
+            t0 = time.time()
+            one_round(s)
+            jax.block_until_ready(s["params"])
+            s["total"] += time.time() - t0
+    return {name: 1e6 * s["total"] / rounds for name, s in state.items()}
+
+
+def run(scale=None, out_rows: list = None, csv_dir=None):
+    rows = out_rows if out_rows is not None else []
+    model = build_model_by_name("cnn-mnist")
+
+    for C, e2e_rounds in ((8, 5), (32, 4), (128, 2)):
+        clients = _bench_clients(C)
+
+        dp = _bench_datapath(clients, C)
+        speedup = dp["host_batched"] / dp["device_resident"]
+        rows.append(dict(
+            name=f"round_engine/datapath/host_batched/C{C}",
+            us_per_call=dp["host_batched"],
+            derived=f"tau={DATA_TAU}|b={DATA_B}",
+        ))
+        rows.append(dict(
+            name=f"round_engine/datapath/device_resident/C{C}",
+            us_per_call=dp["device_resident"],
+            derived=f"speedup={speedup:.2f}x",
+        ))
+
+        e2e = _bench_e2e(model, clients, C, e2e_rounds)
+        speedup = e2e["host_batched"] / e2e["device_resident"]
+        rows.append(dict(
+            name=f"round_engine/e2e_round/host_batched/C{C}",
+            us_per_call=e2e["host_batched"],
+            derived=f"tau={E2E_TAU}|b={E2E_B}|rps={1e6/e2e['host_batched']:.2f}",
+        ))
+        rows.append(dict(
+            name=f"round_engine/e2e_round/device_resident/C{C}",
+            us_per_call=e2e["device_resident"],
+            derived=f"rps={1e6/e2e['device_resident']:.2f}|speedup={speedup:.2f}x",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")

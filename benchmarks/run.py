@@ -24,6 +24,7 @@ from benchmarks import (  # noqa: E402
     fig8_clients,
     kernels_micro,
     roofline,
+    round_engine,
 )
 from benchmarks.common import FULL, QUICK, emit  # noqa: E402
 
@@ -37,6 +38,7 @@ BENCHES = {
     "kernels": kernels_micro.run,
     "beyond": beyond_paper.run,
     "roofline": roofline.run,
+    "round_engine": round_engine.run,
 }
 
 

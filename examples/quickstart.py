@@ -22,6 +22,13 @@ def main():
     ap.add_argument("--case", type=int, default=3, choices=(1, 2, 3))
     ap.add_argument("--tau-max", type=int, default=20)
     ap.add_argument("--eta", type=float, default=0.05)
+    ap.add_argument("--cohort", type=int, default=None,
+                    help="participating clients per round (default: all)")
+    ap.add_argument("--aggregator", default="auto",
+                    choices=("auto", "pallas", "fallback"),
+                    help="server reduce: Pallas vecavg kernel or XLA fallback")
+    ap.add_argument("--data-path", default="device", choices=("device", "host"),
+                    help="device-resident shards vs legacy host-built batches")
     args = ap.parse_args()
 
     print(f"== FedVeca quickstart: SVM / Case {args.case} / {args.clients} clients ==")
@@ -38,7 +45,8 @@ def main():
     model = build_model_by_name("svm-mnist")
 
     cfg = FedSimConfig(mode="fedveca", rounds=args.rounds, tau_max=args.tau_max,
-                       batch_size=16, eta=args.eta)
+                       batch_size=16, eta=args.eta, cohort_size=args.cohort,
+                       aggregator=args.aggregator, data_path=args.data_path)
     veca = FederatedSimulator(model, clients, cfg, test).run()
     print("\nround  loss    acc    tau (adaptive)            eta*tau_k*L")
     for r in veca.rows[:: max(1, args.rounds // 10)]:
@@ -51,7 +59,9 @@ def main():
     results = {"fedveca": veca.rows[-1]}
     for mode in ("fedavg", "fednova"):
         bcfg = FedSimConfig(mode=mode, rounds=args.rounds, tau_max=args.tau_max,
-                            batch_size=16, eta=args.eta, fixed_tau=ft)
+                            batch_size=16, eta=args.eta, fixed_tau=ft,
+                            cohort_size=args.cohort, aggregator=args.aggregator,
+                            data_path=args.data_path)
         results[mode] = FederatedSimulator(model, clients, bcfg, test).run().rows[-1]
     pooled = Dataset(np.concatenate([c.x for c in clients]),
                      np.concatenate([c.y for c in clients]))

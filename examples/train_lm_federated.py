@@ -52,6 +52,10 @@ def main():
     ap.add_argument("--tau-max", type=int, default=4)
     ap.add_argument("--eta", type=float, default=0.05)
     ap.add_argument("--mode", default="fedveca")
+    ap.add_argument("--cohort", type=int, default=None,
+                    help="participating clients per round (default: all)")
+    ap.add_argument("--data-path", default="device", choices=("device", "host"),
+                    help="device-resident shards vs legacy host-built batches")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
@@ -72,7 +76,7 @@ def main():
     fed_cfg = FedSimConfig(
         mode=args.mode, eta=args.eta, tau_max=args.tau_max, batch_size=args.batch,
         rounds=args.rounds, seed=args.seed, eval_every=5,
-        log_dir=args.ckpt_dir,
+        log_dir=args.ckpt_dir, cohort_size=args.cohort, data_path=args.data_path,
     )
     sim = FederatedSimulator(model, clients, fed_cfg, test)
 

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 CI: the repo's own test suite + a real end-to-end smoke.
+#   scripts/ci.sh          # tests + quickstart smoke
+#   scripts/ci.sh tests    # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+if [ "${1:-all}" = "all" ]; then
+  echo "== smoke: examples/quickstart.py =="
+  python examples/quickstart.py --rounds 3
+fi
+echo "CI OK"

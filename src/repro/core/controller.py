@@ -18,10 +18,45 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fedveca import RoundStats
 from repro.core.tree import tree_norm, tree_sqnorm, tree_sub
+
+
+class CohortStats:
+    """Full-C per-client statistics under partial participation.
+
+    The controller's Eq. 15 needs (beta, delta) for every client, but with
+    a cohort only m <= C are observed per round. This scatters each round's
+    cohort stats into a persistent per-client view; clients never observed
+    so far are filled with the mean of the observed ones — NOT zeros, which
+    would poison A_min (A=0 collapses participants to tau_min and hands
+    tau_max to exactly the clients the server knows nothing about).
+    """
+
+    _keys = ("loss0", "beta", "delta", "g0_sqnorm")
+
+    def __init__(self, num_clients: int):
+        self.C = num_clients
+        self.ever = np.zeros(num_clients, bool)
+        self.vals = {k: np.zeros(num_clients, np.float32) for k in self._keys}
+
+    def scatter(self, stats: RoundStats, members: np.ndarray,
+                taus: np.ndarray) -> RoundStats:
+        """Cohort-sized stats + this round's members -> full-C RoundStats."""
+        for k in self._keys:
+            self.vals[k][members] = np.asarray(getattr(stats, k))
+        self.ever[members] = True
+        out = {k: v.copy() for k, v in self.vals.items()}
+        if not self.ever.all():
+            for k in ("beta", "delta"):
+                out[k][~self.ever] = out[k][self.ever].mean()
+        return stats._replace(
+            tau=jnp.asarray(taus),
+            **{k: jnp.asarray(v) for k, v in out.items()},
+        )
 
 
 @dataclasses.dataclass

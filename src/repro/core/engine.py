@@ -1,0 +1,230 @@
+"""RoundEngine: the single owner of the jitted federated round.
+
+Every consumer of the FedVeca round — the simulator, the message-passing
+prototype, the production launcher, and the examples — goes through this
+engine; ``core/aggregation.py`` stays as the only independent
+implementation, deliberately, as the test oracle (DESIGN.md §3).
+
+The engine composes the pieces that used to be re-implemented per caller:
+
+  * the fused round step (``core/fedveca.make_round_step``) specialized by
+    a per-mode ``Strategy`` with a pluggable server reduce — the Pallas
+    vecavg kernel on TPU, ``tree_weighted_sum`` elsewhere;
+  * parameter/scaffold buffer donation (``donate_argnums``), so the global
+    model is updated in place instead of double-buffered — the controller
+    was already designed to consume only RoundStats for exactly this;
+  * the on-device data path (``data/device.DeviceShards``): minibatch
+    indices are drawn *inside* the jitted round, eliminating the per-round
+    host->device upload of a [C, tau_max, batch, ...] tensor (the legacy
+    host-batched path is still accepted via ``batches=``);
+  * cohort sub-sampling: ``m <= C`` participating clients per round with
+    weight renormalization (p restricted to the cohort and rescaled to
+    sum to 1), the standard partial-participation knob for Non-IID FL.
+
+The message-passing prototype uses the engine's two half-round entry
+points (``client_update`` / ``server_aggregate``) so its wire protocol
+stays explicit while the math is shared.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import warnings
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fedveca import ScaffoldState, make_local_update, make_round_step
+from repro.core.strategy import get_strategy, make_reduce
+from repro.core.tree import tree_axpy, tree_zeros_like
+from repro.data.device import DeviceShards
+
+# CPU backends that predate donation support just ignore the hint; the
+# warning would otherwise fire once per trace in every example run.
+warnings.filterwarnings("ignore", message="Some donated buffers were not usable")
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    mode: str = "fedveca"  # fedveca | fednova | fedavg | fedprox | scaffold
+    eta: float = 0.01
+    tau_max: int = 2
+    mu: float = 0.0  # fedprox proximal coefficient
+    batch_size: int = 32  # per-client per-step minibatch (device data path)
+    cohort_size: Optional[int] = None  # m <= C participating clients; None = all
+    aggregator: str = "auto"  # server reduce: 'pallas' | 'fallback' | 'auto'
+    donate: bool = True  # donate params (+ scaffold) buffers to the round
+    unroll_tau: bool = False
+    stat_dtype: Any = jnp.float32
+
+
+class RoundEngine:
+    """Owns the jitted round for one (loss_fn, config) pair.
+
+    loss_fn(params, batch) -> (scalar, metrics dict).
+
+    ``run_round`` executes one full round; pass ``key=`` to sample from the
+    engine's device-resident shards, or ``batches=`` (leaves
+    [C, tau_max, b, ...]) to use host-built data. ``cohort=`` (int32 [m])
+    restricts the round to a sub-sampled cohort.
+    """
+
+    def __init__(
+        self,
+        loss_fn: Callable,
+        cfg: EngineConfig,
+        *,
+        shards: Optional[DeviceShards] = None,
+        num_clients: Optional[int] = None,
+        context: Optional[Callable] = None,  # trace-time ambient (e.g. mesh
+        #   logical axis rules); entered around the round body
+    ):
+        if cfg.cohort_size is not None and cfg.cohort_size < 1:
+            raise ValueError(f"cohort_size must be >= 1, got {cfg.cohort_size}")
+        self.cfg = cfg
+        self.shards = shards
+        self.num_clients = num_clients if num_clients is not None else (
+            shards.num_clients if shards is not None else None
+        )
+        self._context = context or contextlib.nullcontext
+        self._strategy = get_strategy(cfg.mode, mu=cfg.mu)
+        self._reduce = make_reduce(cfg.aggregator)
+        self._round = make_round_step(
+            loss_fn, eta=cfg.eta, tau_max=cfg.tau_max, mode=cfg.mode,
+            mu=cfg.mu, unroll_tau=cfg.unroll_tau, stat_dtype=cfg.stat_dtype,
+            aggregator=cfg.aggregator,
+        )
+        self._local = make_local_update(
+            loss_fn, eta=cfg.eta, tau_max=cfg.tau_max, strategy=self._strategy,
+            stat_dtype=cfg.stat_dtype,
+        )
+
+        def step(params, data, key, batches, tau, p, gprev_sqnorm, scaffold, cohort):
+            sub_scaffold = scaffold
+            if cohort is not None:
+                tau = tau[cohort]
+                pw = p[cohort]
+                pw = pw / jnp.sum(pw)  # partial participation: renormalize
+                if scaffold is not None:
+                    # c_i rows are per CLIENT ID, not cohort position
+                    sub_scaffold = ScaffoldState(
+                        c=scaffold.c,
+                        c_i=jax.tree.map(lambda x: x[cohort], scaffold.c_i),
+                    )
+            else:
+                pw = p
+            if batches is None:
+                batches = self.shards.sample(
+                    data, key, cfg.tau_max, cfg.batch_size, cohort
+                )
+            elif cohort is not None:
+                batches = jax.tree.map(lambda x: x[cohort], batches)
+            with self._context():
+                new_params, stats, new_scaffold = self._round(
+                    params, batches, tau, pw, gprev_sqnorm, sub_scaffold
+                )
+            if cohort is not None and scaffold is not None and new_scaffold is not None:
+                new_scaffold = ScaffoldState(
+                    c=new_scaffold.c,
+                    c_i=jax.tree.map(
+                        lambda full, rows: full.at[cohort].set(rows),
+                        scaffold.c_i, new_scaffold.c_i,
+                    ),
+                )
+            return new_params, stats, new_scaffold
+
+        donate = (0, 7) if cfg.donate else ()  # params, scaffold
+        self._step = jax.jit(step, donate_argnums=donate)
+
+        def client_update(params, batches_c, tau_c, gprev_sqnorm):
+            with self._context():
+                zeros = tree_zeros_like(params)
+                out = self._local(params, batches_c, tau_c, gprev_sqnorm,
+                                  zeros, zeros)
+            tau_f = tau_c.astype(jnp.float32)
+            G = jax.tree.map(lambda x: x / tau_f, out["cum_g"])
+            return dict(G=G, g0=out["g0"], beta=out["beta"], delta=out["delta"],
+                        loss0=out["loss0"])
+
+        self._client_update = jax.jit(client_update)
+
+        def server_aggregate(params, G_stacked, tau, p):
+            tau_f = tau.astype(jnp.float32)
+            with self._context():
+                delta_w = self._strategy.delta_from_normalized(
+                    G_stacked, tau_f, p, cfg.eta, self._reduce
+                )
+            return tree_axpy(1.0, delta_w, params), jnp.sum(p * tau_f)
+
+        self._server_aggregate = jax.jit(server_aggregate)
+        self._weighted_average = jax.jit(
+            lambda stacked, w: self._reduce(stacked, w, 1.0)[0]
+        )
+
+    # -- full round ---------------------------------------------------------
+    def run_round(self, params, tau, p, gprev_sqnorm, *, key=None, batches=None,
+                  scaffold: Optional[ScaffoldState] = None, cohort=None):
+        """One round: (new_params, RoundStats over the cohort, scaffold).
+
+        The params (and scaffold) buffers are DONATED when cfg.donate —
+        callers must use the returned arrays, never the arguments.
+        """
+        if batches is None:
+            if self.shards is None:
+                raise ValueError("no device shards: pass batches= or build the "
+                                 "engine with shards=DeviceShards.from_datasets(...)")
+            if key is None:
+                raise ValueError("device data path needs key=")
+            data = self.shards.tree()
+        else:
+            data = None
+        tau = jnp.asarray(tau, jnp.int32)
+        p = jnp.asarray(p, jnp.float32)
+        cohort = None if cohort is None else jnp.asarray(cohort, jnp.int32)
+        if self._strategy.uses_scaffold and scaffold is None:
+            # materialize the full-C zero state up front: keeps c_i rows
+            # aligned to client ids under cohorts, and keeps the jit trace
+            # unique (None -> ScaffoldState would retrace round 1)
+            C = int(tau.shape[0])
+            scaffold = ScaffoldState(
+                c=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+                c_i=jax.tree.map(
+                    lambda x: jnp.zeros((C,) + x.shape, jnp.float32), params
+                ),
+            )
+        return self._step(params, data, key, batches, tau, p,
+                          jnp.asarray(gprev_sqnorm, jnp.float32), scaffold, cohort)
+
+    # -- message-passing halves (fed/prototype.py) --------------------------
+    def client_update(self, params, batches_c, tau: int, gprev_sqnorm):
+        """Alg. 2 for ONE client: batches_c leaves [T, b, ...], T = tau.
+
+        Returns dict(G, g0, beta, delta, loss0) — the client's reply
+        message. Retraces per distinct T (the wire carries exactly tau
+        minibatches, matching the paper's deployment).
+        """
+        return self._client_update(
+            params, batches_c, jnp.asarray(tau, jnp.int32),
+            jnp.asarray(gprev_sqnorm, jnp.float32),
+        )
+
+    def server_aggregate(self, params, G_stacked, tau, p):
+        """Alg. 1 line 7 over stacked normalized vectors (leaves [C, ...])."""
+        return self._server_aggregate(
+            params, G_stacked, jnp.asarray(tau, jnp.int32),
+            jnp.asarray(p, jnp.float32),
+        )
+
+    def weighted_average(self, stacked, w):
+        """sum_c w_c * stacked_c through the engine's reduce (Eq. 8)."""
+        return self._weighted_average(stacked, jnp.asarray(w, jnp.float32))
+
+    # -- cohort sub-sampling ------------------------------------------------
+    def sample_cohort(self, rng: np.random.RandomState) -> Optional[np.ndarray]:
+        """Draw this round's participating clients, or None for all of them."""
+        m, C = self.cfg.cohort_size, self.num_clients
+        if m is None or C is None or m >= C:
+            return None
+        return np.sort(rng.choice(C, size=m, replace=False)).astype(np.int32)

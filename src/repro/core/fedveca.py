@@ -16,28 +16,29 @@ The paper's round (Alg. 1 lines 3-7 + Alg. 2) is fused into a single jitted
     15-18 are estimated *inside* the same scan from parameter/gradient norms,
     so the server round-trips of the prototype collapse into the program.
 
-Baselines (FedAvg / FedNova / FedProx / SCAFFOLD) share the same machinery —
-see ``mode`` — which is exactly the paper's "generalized update rules" (Eq.
-2-3) specialization table.
+Mode specialization (FedAvg / FedNova / FedProx / SCAFFOLD — the paper's
+"generalized update rules", Eq. 2-3) lives in ``core/strategy.py``: the
+client-side direction and the server-side reduce are Strategy objects, and
+the server reduce itself is pluggable (`aggregator=`) between the fused
+Pallas vecavg kernel and the pure-XLA tree_weighted_sum fallback.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.strategy import MODES, Strategy, get_strategy, make_reduce
 from repro.core.tree import (
     tree_axpy,
-    tree_scale,
     tree_sqnorm,
     tree_sub,
-    tree_weighted_sum,
     tree_zeros_like,
 )
 
-MODES = ("fedveca", "fednova", "fedavg", "fedprox", "scaffold")
+__all__ = ["MODES", "RoundStats", "ScaffoldState", "make_local_update",
+           "make_round_step"]
 
 
 class RoundStats(NamedTuple):
@@ -59,38 +60,32 @@ class ScaffoldState(NamedTuple):
     c_i: Any  # per-client control variates (leaves [C, ...])
 
 
-def make_round_step(
+def make_local_update(
     loss_fn: Callable,
     *,
     eta: float,
     tau_max: int,
+    strategy: Optional[Strategy] = None,
     mode: str = "fedveca",
-    mu: float = 0.0,  # fedprox proximal coefficient
-    unroll_tau: bool = False,  # fully unroll the local-step scan (dry-run
-    #   cost-exactness: every tau body lands in the HLO cost model)
-    stat_dtype=jnp.float32,  # g0 / cum_g accumulator + aggregation dtype.
-    #   bf16 halves accumulator HBM traffic and the two model-sized
-    #   all-reduces (beyond-paper; quantify in EXPERIMENTS.md §Perf)
+    mu: float = 0.0,
+    unroll_tau: bool = False,
+    stat_dtype=jnp.float32,
 ) -> Callable:
-    """Build the jitted federated round.
+    """Build one client's local loop (Alg. 2 lines 3-19), un-vmapped.
 
-    loss_fn(params, batch) -> (scalar, metrics dict).
+    local_update(params0, batches_c, tau_c, gprev_sqnorm, c_server, c_client)
+      batches_c: leaves [T, batch, ...] with T <= tau_max (scan trips follow
+                 the data's leading axis, so the message-passing client can
+                 pass exactly tau batches)
+      -> dict(params, g0, cum_g, beta, delta, loss0)
 
-    round_step(params, batches, tau, p, gprev_sqnorm, scaffold=None)
-      params:  global model pytree
-      batches: per-client per-step minibatches, leaves [C, tau_max, ...]
-      tau:     [C] int32, 1 <= tau_i <= tau_max
-      p:       [C] client weights (D_i / D)
-      gprev_sqnorm: scalar ||grad F(w_{k-1})||^2 (server broadcast, Alg. 2
-                    line 14/17); pass 0.0 in round 0 (delta falls back to 1)
-      -> (new_params, RoundStats, new_scaffold)
+    The fused round step vmaps this over the client axis; the prototype
+    calls it per client so both share one implementation.
     """
-    assert mode in MODES, mode
+    strategy = strategy or get_strategy(mode, mu=mu)
     vg = jax.value_and_grad(lambda p_, b_: loss_fn(p_, b_), has_aux=True)
 
-    def local_loop(params0, batches_c, tau_c, gprev_sqnorm, c_server, c_client):
-        """One client's tau_max masked SGD steps. Not yet vmapped."""
-
+    def local_update(params0, batches_c, tau_c, gprev_sqnorm, c_server, c_client):
         f32_zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, stat_dtype), params0)
         init = dict(
             params=params0,
@@ -129,17 +124,8 @@ def make_round_step(
             delta_l = cumsum_sq / denom
             delta = jnp.maximum(carry["delta"], lam_ge1 * delta_l)
 
-            # --- local SGD update (Eq. 1), mode-adjusted ------------------
-            upd = g
-            if mode == "fedprox":
-                upd = tree_axpy(mu, drift, g)
-            if mode == "scaffold":
-                upd = jax.tree.map(
-                    lambda gg, cs, ci: gg.astype(jnp.float32)
-                    + cs.astype(jnp.float32)
-                    - ci.astype(jnp.float32),
-                    g, c_server, c_client,
-                )
+            # --- local SGD update (Eq. 1), strategy-adjusted --------------
+            upd = strategy.local_direction(g, drift, c_server, c_client)
             params = jax.tree.map(
                 lambda w, u: (
                     w.astype(jnp.float32) - eta * active * u.astype(jnp.float32)
@@ -150,10 +136,49 @@ def make_round_step(
                        delta=delta, loss0=loss0)
             return new, None
 
-        lams = jnp.arange(tau_max, dtype=jnp.int32)
+        T = jax.tree.leaves(batches_c)[0].shape[0]
+        lams = jnp.arange(T, dtype=jnp.int32)
         out, _ = jax.lax.scan(step, init, (lams, batches_c),
                               unroll=True if unroll_tau else 1)
         return out
+
+    return local_update
+
+
+def make_round_step(
+    loss_fn: Callable,
+    *,
+    eta: float,
+    tau_max: int,
+    mode: str = "fedveca",
+    mu: float = 0.0,  # fedprox proximal coefficient
+    unroll_tau: bool = False,  # fully unroll the local-step scan (dry-run
+    #   cost-exactness: every tau body lands in the HLO cost model)
+    stat_dtype=jnp.float32,  # g0 / cum_g accumulator + aggregation dtype.
+    #   bf16 halves accumulator HBM traffic and the two model-sized
+    #   all-reduces (beyond-paper; quantify in EXPERIMENTS.md §Perf)
+    aggregator="fallback",  # 'pallas' | 'fallback' | 'auto' | Reduce callable
+) -> Callable:
+    """Build the jitted federated round.
+
+    loss_fn(params, batch) -> (scalar, metrics dict).
+
+    round_step(params, batches, tau, p, gprev_sqnorm, scaffold=None)
+      params:  global model pytree
+      batches: per-client per-step minibatches, leaves [C, tau_max, ...]
+      tau:     [C] int32, 1 <= tau_i <= tau_max
+      p:       [C] client weights (D_i / D)
+      gprev_sqnorm: scalar ||grad F(w_{k-1})||^2 (server broadcast, Alg. 2
+                    line 14/17); pass 0.0 in round 0 (delta falls back to 1)
+      -> (new_params, RoundStats, new_scaffold)
+    """
+    assert mode in MODES, mode
+    strategy = get_strategy(mode, mu=mu)
+    reduce = make_reduce(aggregator)
+    local_update = make_local_update(
+        loss_fn, eta=eta, tau_max=tau_max, strategy=strategy,
+        unroll_tau=unroll_tau, stat_dtype=stat_dtype,
+    )
 
     def round_step(params, batches, tau, p, gprev_sqnorm, scaffold: Optional[ScaffoldState] = None):
         C = tau.shape[0]
@@ -166,49 +191,26 @@ def make_round_step(
         )
 
         outs = jax.vmap(
-            local_loop, in_axes=(None, 0, 0, None, None, 0)
+            local_update, in_axes=(None, 0, 0, None, None, 0)
         )(params, batches, tau, gprev_sqnorm, c_server, c_client)
 
-        # normalized bi-directional vectors (leaves [C, ...])
-        G = jax.tree.map(lambda x: x / tau_f.reshape((C,) + (1,) * (x.ndim - 1)), outs["cum_g"])
         tau_k = jnp.sum(p * tau_f)
-
-        if mode in ("fedveca", "fednova"):
-            d_k = tree_weighted_sum(G, p)  # direction of global descent
-            delta_w = tree_scale(d_k, -eta * tau_k)  # Eq. (5)
-        elif mode in ("fedavg", "fedprox"):
-            delta_w = tree_scale(tree_weighted_sum(outs["cum_g"], p), -eta)
-        elif mode == "scaffold":
-            local_delta = jax.tree.map(
-                lambda wc, w0: wc.astype(jnp.float32) - w0.astype(jnp.float32)[None],
-                outs["params"], params,
-            )
-            delta_w = tree_weighted_sum(local_delta, p)
+        delta_w = strategy.server_delta(outs, params, tau_f, p, eta, reduce)
         new_params = tree_axpy(1.0, delta_w, params)
 
         new_scaffold = scaffold
-        if mode == "scaffold":
-            # c_i' = c_i - c + (w_k - w_i^tau)/(tau_i * eta); c' = c + mean(dc)
-            inv = 1.0 / (tau_f * eta)
-            c_i_new = jax.tree.map(
-                lambda ci, cs, wc, w0: (
-                    ci.astype(jnp.float32)
-                    - cs.astype(jnp.float32)[None]
-                    + (w0.astype(jnp.float32)[None] - wc.astype(jnp.float32))
-                    * inv.reshape((C,) + (1,) * (w0.ndim))
-                ).astype(ci.dtype),
-                c_client, c_server, outs["params"], params,
+        if strategy.uses_scaffold:
+            new_scaffold = strategy.update_scaffold(
+                outs, params, ScaffoldState(c=c_server, c_i=c_client), tau_f, eta
             )
-            dc = jax.tree.map(lambda a, b: a - b, c_i_new, c_client)
-            c_new = tree_axpy(1.0, tree_weighted_sum(dc, jnp.full((C,), 1.0 / C)), c_server)
-            new_scaffold = ScaffoldState(c=c_new, c_i=c_i_new)
 
-        global_grad = tree_weighted_sum(outs["g0"], p)  # Eq. (8)
+        # Eq. (8): global gradient + per-client ||g0||^2 from the same reduce
+        global_grad, g0_sqn = reduce(outs["g0"], p, 1.0)
         stats = RoundStats(
             loss0=outs["loss0"],
             beta=outs["beta"],
             delta=outs["delta"],
-            g0_sqnorm=jax.vmap(tree_sqnorm)(outs["g0"]),
+            g0_sqnorm=g0_sqn,
             tau=tau,
             tau_k=tau_k,
             global_grad=global_grad,

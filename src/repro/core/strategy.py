@@ -1,0 +1,216 @@
+"""Per-mode federated update strategies + pluggable server aggregators.
+
+The paper's "generalized update rules" (Eq. 2-3) specialize into concrete
+algorithms along exactly two seams, and this module makes each seam an
+object instead of an ``if mode == ...`` chain inside the round step:
+
+  * ``ClientUpdate`` — how a client turns its minibatch gradient into the
+    local SGD direction (Alg. 2 line 7): plain SGD, FedProx's proximal
+    pull, SCAFFOLD's control-variate correction;
+  * ``ServerAggregate`` — how the server reduces the stacked per-client
+    accumulators into the global step (Alg. 1 line 7 / Eq. 3+5):
+    step-size-normalized (FedVeca/FedNova, Eq. 5), unnormalized sums
+    (FedAvg/FedProx, Eq. 4), or parameter-delta averaging (SCAFFOLD).
+
+Both halves of a mode live on one ``Strategy`` so ``get_strategy(mode)``
+is the single registry the round engine, the message-passing prototype,
+and the scale bundles all resolve against (DESIGN.md §3).
+
+The server reduce itself is pluggable: every ``ServerAggregate`` routes
+through a ``reduce(stacked, w, scale) -> (tree, sqnorms)`` callable.
+``pallas_reduce`` lowers to the fused vecavg kernel — one flattened
+[C, D_total] HBM pass that also yields the per-client squared norms for
+free (DESIGN.md §7) — while ``fallback_reduce`` keeps the pure-XLA
+``tree_weighted_sum`` path for backends without Pallas.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree import (
+    tree_scale,
+    tree_sqnorm,
+    tree_weighted_sum,
+)
+
+MODES = ("fedveca", "fednova", "fedavg", "fedprox", "scaffold")
+
+# reduce(stacked [C,...] tree, w [C], scale scalar)
+#   -> (scale * sum_c w_c * stacked_c, per-client ||stacked_c||^2)
+Reduce = Callable[[Any, jax.Array, Any], Tuple[Any, jax.Array]]
+
+
+def fallback_reduce(stacked, w, scale):
+    """Pure-XLA weighted reduction (per-leaf tensordot); any backend."""
+    out = tree_scale(tree_weighted_sum(stacked, w), scale)
+    sqn = jax.vmap(tree_sqnorm)(stacked)
+    return out, sqn
+
+
+def pallas_reduce(stacked, w, scale):
+    """Fused vecavg kernel: one [C, D_total] pass, norms ride along."""
+    from repro.kernels.vecavg.ops import vecavg_tree
+
+    # vecavg computes -scale * p @ U, so negate to match reduce's contract.
+    return vecavg_tree(stacked, w, -scale, use_pallas=True)
+
+
+def make_reduce(spec) -> Reduce:
+    """'pallas' | 'fallback' | 'auto' | callable -> Reduce."""
+    if callable(spec):
+        return spec
+    if spec in (None, "fallback"):
+        return fallback_reduce
+    if spec == "pallas":
+        return pallas_reduce
+    if spec == "auto":
+        # interpret-mode Pallas on CPU is an emulator, not a fast path
+        return pallas_reduce if jax.default_backend() == "tpu" else fallback_reduce
+    raise ValueError(f"unknown aggregator {spec!r}")
+
+
+def _per_client(tau_f, like):
+    """Broadcast [C] over the trailing dims of a [C, ...] leaf."""
+    return tau_f.reshape((tau_f.shape[0],) + (1,) * (like.ndim - 1))
+
+
+class Strategy:
+    """One federated mode: client-side direction + server-side reduce."""
+
+    name: str = "base"
+    uses_scaffold: bool = False
+
+    # -- client half (Alg. 2 line 7) ----------------------------------------
+    def local_direction(self, g, drift, c_server, c_client):
+        """Gradient -> local SGD direction for one (unvmapped) client.
+
+        g: minibatch gradient pytree; drift: w^l - w_k; c_server/c_client:
+        SCAFFOLD control variates (zero trees for other modes).
+        """
+        return g
+
+    # -- server half (Alg. 1 line 7) ----------------------------------------
+    def delta_from_normalized(self, G, tau_f, p, eta, reduce: Reduce):
+        """Global step from *normalized* client vectors G_i = cum_g_i/tau_i.
+
+        This is the message-passing server's entry point: the wire carries
+        G_i (Eq. 5), not raw accumulators.
+        """
+        raise NotImplementedError
+
+    def server_delta(self, outs, params, tau_f, p, eta, reduce: Reduce):
+        """Global step from the fused round's stacked outputs dict."""
+        C = tau_f.shape[0]
+        G = jax.tree.map(lambda x: x / _per_client(tau_f, x), outs["cum_g"])
+        return self.delta_from_normalized(G, tau_f, p, eta, reduce)
+
+    def update_scaffold(self, outs, params, scaffold, tau_f, eta):
+        return scaffold
+
+
+class FedVecaStrategy(Strategy):
+    """Eq. 5: w' = w - eta * tau_k * sum_i p_i G_i (FedNova update rule,
+    driven by the adaptive bi-directional tau controller)."""
+
+    name = "fedveca"
+
+    def delta_from_normalized(self, G, tau_f, p, eta, reduce):
+        tau_k = jnp.sum(p * tau_f)
+        delta_w, _ = reduce(G, p, -eta * tau_k)
+        return delta_w
+
+
+class FedNovaStrategy(FedVecaStrategy):
+    """Same aggregation algebra as FedVeca; tau is fixed, not adapted."""
+
+    name = "fednova"
+
+
+class FedAvgStrategy(Strategy):
+    """Eq. 4: unnormalized sums, w' = w - eta * sum_i p_i sum_l g_i^l."""
+
+    name = "fedavg"
+
+    def delta_from_normalized(self, G, tau_f, p, eta, reduce):
+        cum_g = jax.tree.map(lambda x: x * _per_client(tau_f, x), G)
+        delta_w, _ = reduce(cum_g, p, -eta)
+        return delta_w
+
+    def server_delta(self, outs, params, tau_f, p, eta, reduce):
+        delta_w, _ = reduce(outs["cum_g"], p, -eta)
+        return delta_w
+
+
+class FedProxStrategy(FedAvgStrategy):
+    """FedAvg aggregation + proximal local objective (mu/2)||w - w_k||^2."""
+
+    name = "fedprox"
+
+    def __init__(self, mu: float = 0.0):
+        self.mu = mu
+
+    def local_direction(self, g, drift, c_server, c_client):
+        from repro.core.tree import tree_axpy
+
+        return tree_axpy(self.mu, drift, g)
+
+
+class ScaffoldStrategy(Strategy):
+    """SCAFFOLD: variance-reduced local steps, parameter-delta averaging."""
+
+    name = "scaffold"
+    uses_scaffold = True
+
+    def local_direction(self, g, drift, c_server, c_client):
+        return jax.tree.map(
+            lambda gg, cs, ci: gg.astype(jnp.float32)
+            + cs.astype(jnp.float32)
+            - ci.astype(jnp.float32),
+            g, c_server, c_client,
+        )
+
+    def server_delta(self, outs, params, tau_f, p, eta, reduce):
+        local_delta = jax.tree.map(
+            lambda wc, w0: wc.astype(jnp.float32) - w0.astype(jnp.float32)[None],
+            outs["params"], params,
+        )
+        delta_w, _ = reduce(local_delta, p, 1.0)
+        return delta_w
+
+    def update_scaffold(self, outs, params, scaffold, tau_f, eta):
+        # c_i' = c_i - c + (w_k - w_i^tau)/(tau_i * eta); c' = c + mean(dc)
+        from repro.core.fedveca import ScaffoldState
+        from repro.core.tree import tree_axpy
+
+        C = tau_f.shape[0]
+        c_server, c_client = scaffold.c, scaffold.c_i
+        inv = 1.0 / (tau_f * eta)
+        c_i_new = jax.tree.map(
+            lambda ci, cs, wc, w0: (
+                ci.astype(jnp.float32)
+                - cs.astype(jnp.float32)[None]
+                + (w0.astype(jnp.float32)[None] - wc.astype(jnp.float32))
+                * inv.reshape((C,) + (1,) * (w0.ndim))
+            ).astype(ci.dtype),
+            c_client, c_server, outs["params"], params,
+        )
+        dc = jax.tree.map(lambda a, b: a - b, c_i_new, c_client)
+        c_new = tree_axpy(1.0, tree_weighted_sum(dc, jnp.full((C,), 1.0 / C)), c_server)
+        return ScaffoldState(c=c_new, c_i=c_i_new)
+
+
+def get_strategy(mode: str, *, mu: float = 0.0) -> Strategy:
+    if mode in ("fedveca",):
+        return FedVecaStrategy()
+    if mode == "fednova":
+        return FedNovaStrategy()
+    if mode == "fedavg":
+        return FedAvgStrategy()
+    if mode == "fedprox":
+        return FedProxStrategy(mu)
+    if mode == "scaffold":
+        return ScaffoldStrategy()
+    raise ValueError(f"unknown mode {mode!r}; valid: {MODES}")

@@ -1,0 +1,128 @@
+"""On-device federated data path (DESIGN.md §3).
+
+The seed hot path rebuilt a host-side ``[C, tau_max, batch, ...]`` tensor
+with numpy fancy-indexing every round and re-uploaded it — at LM scale
+that upload dominates the round. Here the client shards are stacked once
+into device-resident ``[C, N_max, ...]`` buffers (padded to the largest
+shard; padding rows are never sampled because indices are drawn modulo the
+true shard size) and the per-step minibatch *indices* are drawn inside the
+jitted round with ``jax.random`` — zero host->device bytes per round.
+
+Two batch layouts exist in the repo and both are produced here:
+
+  * vision: ``dict(x=[.., b, *obs], y=[.., b])`` float/int pairs;
+  * LM: raw token sequences ``[.., b, L+1]`` split into
+    ``dict(tokens=seqs[..,: -1], targets=seqs[.., 1:])``.
+
+``host_stacked_batches`` keeps the seed's host-side sampling as the
+explicit legacy path (benchmarks compare the two; the engine accepts
+either).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import Dataset
+
+
+def format_batch(x, y=None) -> dict:
+    """Raw (x[, y]) arrays -> the model batch dict, host or device side.
+
+    Integer ``x`` is an LM token stream [*, L+1] -> (tokens, targets);
+    float ``x`` is a vision batch -> (x, y).
+    """
+    if jnp.issubdtype(jnp.asarray(x).dtype, jnp.integer):
+        return dict(tokens=jnp.asarray(x[..., :-1], jnp.int32),
+                    targets=jnp.asarray(x[..., 1:], jnp.int32))
+    return dict(x=jnp.asarray(x, jnp.float32), y=jnp.asarray(y, jnp.int32))
+
+
+class DeviceShards:
+    """Client shards resident on device: leaves [C, N_max, ...] + sizes [C].
+
+    ``sample`` is jit-traceable: called inside the round step it adds a
+    per-client gather to the program instead of a per-round host upload.
+    """
+
+    def __init__(self, x: jax.Array, y: Optional[jax.Array], sizes: jax.Array):
+        self.x = x
+        self.y = y
+        self.sizes = sizes
+        self.is_lm = jnp.issubdtype(x.dtype, jnp.integer)
+
+    @property
+    def num_clients(self) -> int:
+        return int(self.x.shape[0])
+
+    @staticmethod
+    def from_datasets(datasets: Sequence[Dataset]) -> "DeviceShards":
+        sizes = np.array([len(d) for d in datasets], np.int32)
+        n_max = int(sizes.max())
+
+        def pad_stack(arrs):
+            out = np.zeros((len(arrs), n_max) + arrs[0].shape[1:], arrs[0].dtype)
+            for i, a in enumerate(arrs):
+                out[i, : len(a)] = a
+            return jnp.asarray(out)
+
+        x = pad_stack([d.x for d in datasets])
+        lm = np.issubdtype(datasets[0].x.dtype, np.integer)
+        y = None if lm else pad_stack([d.y for d in datasets])
+        return DeviceShards(x, y, jnp.asarray(sizes))
+
+    # -- traced arguments ---------------------------------------------------
+    def tree(self):
+        """The pytree the engine passes into jit (no re-upload: already
+        device-resident, jit sees the same buffers every round)."""
+        arrs = dict(x=self.x, sizes=self.sizes)
+        if self.y is not None:
+            arrs["y"] = self.y
+        return arrs
+
+    def sample(self, arrs: dict, key: jax.Array, tau_max: int, batch: int,
+               cohort: Optional[jax.Array] = None) -> dict:
+        """Draw leaves [M, tau_max, batch, ...] inside jit (M = cohort size).
+
+        One fused randint draws every client's indices (per-client maxval
+        via broadcast, so padding rows are never sampled) and one gather
+        per array pulls the rows; an optimization barrier keeps the gather
+        from being fused into (and re-materialized by) the round body.
+        """
+        C = arrs["x"].shape[0]
+        ids = jnp.arange(C, dtype=jnp.int32) if cohort is None else cohort
+        M = ids.shape[0]
+        sizes = arrs["sizes"][ids]
+        idx = jax.random.randint(
+            key, (M, tau_max, batch), 0, sizes[:, None, None]
+        )  # [M, tau_max, batch], row m in [0, size_m)
+
+        def gather(stacked):
+            return stacked[ids[:, None, None], idx]
+
+        if self.is_lm:
+            seqs = gather(arrs["x"])
+            out = dict(tokens=seqs[..., :-1].astype(jnp.int32),
+                       targets=seqs[..., 1:].astype(jnp.int32))
+        else:
+            out = dict(x=gather(arrs["x"]).astype(jnp.float32),
+                       y=gather(arrs["y"]).astype(jnp.int32))
+        return jax.lax.optimization_barrier(out)
+
+
+def host_stacked_batches(datasets: List[Dataset], rng: np.random.RandomState,
+                         tau_max: int, batch: int) -> dict:
+    """Legacy host path: leaves [C, tau_max, batch, ...], a fresh minibatch
+    per local step, built with numpy and uploaded whole every round."""
+    xs, ys = [], []
+    for d in datasets:
+        idx = rng.randint(0, len(d), size=(tau_max, batch))
+        xs.append(d.x[idx])
+        ys.append(d.y[idx])
+    x = np.stack(xs)
+    if x.dtype in (np.int32, np.int64):
+        return format_batch(x)
+    return format_batch(x, np.stack(ys))

@@ -3,27 +3,35 @@
 
 This mirrors the paper's Raspberry-Pi/laptop deployment: explicit
 send/receive of (w_k, tau), (F_i, G_i), (grad F(w_{k-1})), (beta_i, delta_i)
-and the STOP flag. It is the slow-but-transparent sibling of the fused
-round step; tests assert both produce the same global models. The message
-log doubles as a wire-protocol trace (bytes counted for the communication
+and the STOP flag. The wire protocol stays explicit, but the math on both
+ends is the RoundEngine's: clients run ``engine.client_update`` (the same
+masked local loop the fused round vmaps) and the server reduces through
+``engine.server_aggregate`` (the same strategy + vecavg reduce), so the
+prototype and the fused round step cannot drift apart. The message log
+doubles as a wire-protocol trace (bytes counted for the communication
 analysis in EXPERIMENTS.md).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import client_round, server_aggregate
 from repro.core.controller import ControllerConfig, FedVecaController
-from repro.core.tree import tree_axpy, tree_sqnorm, tree_zeros_like
+from repro.core.engine import EngineConfig, RoundEngine
+from repro.core.tree import tree_sqnorm
+from repro.data.device import format_batch
 
 
 def _tree_bytes(t) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
+
+
+def _stack(trees):
+    """List of per-item pytrees -> one pytree with leading stack axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
 
 
 class FedVecaClient:
@@ -37,31 +45,27 @@ class FedVecaClient:
         self.b = batch_size
         self.eta = eta
         self.rng = np.random.RandomState(seed + client_id)
+        self.engine = RoundEngine(
+            model.loss, EngineConfig(mode="fedveca", eta=eta, donate=False),
+            num_clients=1,
+        )
 
     def _batches(self, tau: int):
-        out = []
-        for _ in range(tau):
-            idx = self.rng.randint(0, len(self.data), size=self.b)
-            if self.data.x.dtype in (np.int32, np.int64):
-                out.append(dict(tokens=jnp.asarray(self.data.x[idx, :-1], jnp.int32),
-                                targets=jnp.asarray(self.data.x[idx, 1:], jnp.int32)))
-            else:
-                out.append(dict(x=jnp.asarray(self.data.x[idx], jnp.float32),
-                                y=jnp.asarray(self.data.y[idx], jnp.int32)))
-        return out
+        """Leaves [tau, b, ...]: exactly the minibatches the wire pays for."""
+        idx = self.rng.randint(0, len(self.data), size=(tau, self.b))
+        if self.data.x.dtype in (np.int32, np.int64):
+            return format_batch(self.data.x[idx])
+        return format_batch(self.data.x[idx], self.data.y[idx])
 
     def local_round(self, msg: Dict[str, Any]) -> Dict[str, Any]:
         """Receive (w_k, tau_i, ||grad F(w_{k-1})||^2); run Alg. 2 lines 3-19."""
         w_k = msg["w"]
         tau = int(msg["tau"])
         gprev_sqnorm = float(msg.get("gprev_sqnorm", 0.0))
-        batches = self._batches(tau)
-        loss0 = float(self.model.loss(w_k, batches[0])[0])
-        G, g0, beta, delta = client_round(
-            self.model.loss, w_k, batches, tau, self.eta, gprev_sqnorm
-        )
-        return dict(id=self.id, G=G, g0=g0, beta=beta, delta=delta, loss0=loss0,
-                    tau=tau)
+        out = self.engine.client_update(w_k, self._batches(tau), tau, gprev_sqnorm)
+        return dict(id=self.id, G=out["G"], g0=out["g0"],
+                    beta=float(out["beta"]), delta=float(out["delta"]),
+                    loss0=float(out["loss0"]), tau=tau)
 
 
 class FedVecaServer:
@@ -74,6 +78,11 @@ class FedVecaServer:
         self.clients = clients
         self.p = np.asarray(p, np.float64)
         self.eta = eta
+        self.engine = RoundEngine(
+            model.loss,
+            EngineConfig(mode="fedveca", eta=eta, tau_max=tau_max, donate=False),
+            num_clients=len(clients),
+        )
         self.controller = FedVecaController(
             ControllerConfig(eta=eta, alpha=alpha, tau_max=tau_max, tau_init=tau_init),
             len(clients),
@@ -98,13 +107,14 @@ class FedVecaServer:
             self.bytes_recv += _tree_bytes(reply["G"]) + _tree_bytes(reply["g0"]) + 24
             replies.append(reply)
 
-        Gs = [r["G"] for r in replies]
-        self.params, tau_k = server_aggregate(
-            self.params, Gs, self.taus, self.p, self.eta, mode="fedveca"
+        p32 = np.asarray(self.p, np.float32)
+        G_stacked = _stack([r["G"] for r in replies])
+        self.params, tau_k = self.engine.server_aggregate(
+            self.params, G_stacked, np.asarray(self.taus), p32
         )
-        global_grad = tree_zeros_like(params_start)
-        for pi, r in zip(self.p, replies):
-            global_grad = tree_axpy(float(pi), r["g0"], global_grad)
+        global_grad = self.engine.weighted_average(
+            _stack([r["g0"] for r in replies]), p32
+        )
         stats = RoundStats(
             loss0=jnp.array([r["loss0"] for r in replies], jnp.float32),
             beta=jnp.array([r["beta"] for r in replies], jnp.float32),

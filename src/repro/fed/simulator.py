@@ -1,4 +1,4 @@
-"""Federated simulator: K rounds of the fused round step + host controller.
+"""Federated simulator: K rounds of the RoundEngine + host controller.
 
 Implements the paper's full experimental protocol (§IV-A):
   * FedVeca: adaptive tau via the controller (Alg. 1);
@@ -7,6 +7,15 @@ Implements the paper's full experimental protocol (§IV-A):
   * centralized SGD trained for the same total iteration count tau_all;
   * per-round test loss/accuracy, premise value eta*tau_k*L, and the
     instantaneous (tau_i, beta_i, delta_i, A_i, L_k) traces of Fig. 6.
+
+The round itself is owned by ``core/engine.RoundEngine``: client shards
+live on device and minibatches are sampled inside the jitted round
+(``data_path="device"``, the default; ``"host"`` keeps the seed's
+numpy-sampled, re-uploaded batches for comparison), the server reduce can
+run through the Pallas vecavg kernel (``aggregator=``), and partial
+participation is a config knob (``cohort_size``). With a cohort, the
+controller sees scattered statistics: non-participants keep their last
+observed beta/delta and their tau is still re-predicted every round.
 """
 from __future__ import annotations
 
@@ -17,9 +26,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.controller import ControllerConfig, ControllerState, FedVecaController
-from repro.core.fedveca import ScaffoldState, make_round_step
+from repro.core.controller import CohortStats, ControllerConfig, FedVecaController
+from repro.core.engine import EngineConfig, RoundEngine
 from repro.core.tree import tree_sqnorm
+from repro.data.device import DeviceShards, format_batch, host_stacked_batches
 from repro.data.synthetic import Dataset
 from repro.metrics.logger import RunLogger
 
@@ -38,6 +48,11 @@ class FedSimConfig:
     fixed_tau: Optional[np.ndarray] = None  # fedavg/fednova per-client tau
     eval_every: int = 1
     log_dir: Optional[str] = None
+    # -- engine knobs -------------------------------------------------------
+    cohort_size: Optional[int] = None  # m <= C participating clients/round
+    aggregator: str = "auto"  # 'pallas' | 'fallback' | 'auto'
+    data_path: str = "device"  # 'device' (resident shards) | 'host' (legacy)
+    donate: bool = True
 
 
 class FederatedSimulator:
@@ -56,10 +71,20 @@ class FederatedSimulator:
         sizes = np.array([len(d) for d in client_data], np.float64)
         self.p = (sizes / sizes.sum()).astype(np.float32)
 
-        self.round_step = jax.jit(
-            make_round_step(
-                model.loss, eta=cfg.eta, tau_max=cfg.tau_max, mode=cfg.mode, mu=cfg.mu
-            )
+        shards = (
+            DeviceShards.from_datasets(client_data)
+            if cfg.data_path == "device"
+            else None
+        )
+        self.engine = RoundEngine(
+            model.loss,
+            EngineConfig(
+                mode=cfg.mode, eta=cfg.eta, tau_max=cfg.tau_max, mu=cfg.mu,
+                batch_size=cfg.batch_size, cohort_size=cfg.cohort_size,
+                aggregator=cfg.aggregator, donate=cfg.donate,
+            ),
+            shards=shards,
+            num_clients=self.C,
         )
         ctrl_cfg = ControllerConfig(
             eta=cfg.eta, alpha=cfg.alpha, tau_max=cfg.tau_max, tau_init=cfg.tau_init
@@ -68,22 +93,11 @@ class FederatedSimulator:
         self._eval_fn = jax.jit(model.loss)
 
     # -- data ---------------------------------------------------------------
-    def _sample_batches(self, rng: np.random.RandomState):
-        """leaves [C, tau_max, b, ...]: a fresh minibatch per local step."""
-        b, T = self.cfg.batch_size, self.cfg.tau_max
-        xs, ys = [], []
-        for d in self.client_data:
-            idx = rng.randint(0, len(d), size=(T, b))
-            xs.append(d.x[idx])
-            ys.append(d.y[idx])
-        x = np.stack(xs)
-        y = np.stack(ys)
-        if x.dtype in (np.int32, np.int64):  # LM tokens: split into (in, tgt)
-            return dict(
-                tokens=jnp.asarray(x[..., :-1], jnp.int32),
-                targets=jnp.asarray(x[..., 1:], jnp.int32),
-            )
-        return dict(x=jnp.asarray(x, jnp.float32), y=jnp.asarray(y, jnp.int32))
+    def _host_batches(self, rng: np.random.RandomState):
+        """Legacy path: leaves [C, tau_max, b, ...] built host-side."""
+        return host_stacked_batches(
+            self.client_data, rng, self.cfg.tau_max, self.cfg.batch_size
+        )
 
     def evaluate(self, params, max_batch: int = 2048) -> Dict[str, float]:
         if self.test_data is None:
@@ -91,16 +105,8 @@ class FederatedSimulator:
         d = self.test_data
         losses, accs, n = [], [], 0
         for s in range(0, len(d), max_batch):
-            if d.x.dtype in (np.int32, np.int64):
-                batch = dict(
-                    tokens=jnp.asarray(d.x[s : s + max_batch, :-1], jnp.int32),
-                    targets=jnp.asarray(d.x[s : s + max_batch, 1:], jnp.int32),
-                )
-            else:
-                batch = dict(
-                    x=jnp.asarray(d.x[s : s + max_batch], jnp.float32),
-                    y=jnp.asarray(d.y[s : s + max_batch], jnp.int32),
-                )
+            sl = slice(s, s + max_batch)
+            batch = format_batch(d.x[sl], d.y[sl])
             loss, mets = self._eval_fn(params, batch)
             bs = len(next(iter(batch.values())))
             losses.append(float(loss) * bs)
@@ -117,6 +123,7 @@ class FederatedSimulator:
         cfg = self.cfg
         rounds = rounds or cfg.rounds
         rng = np.random.RandomState(cfg.seed)
+        key = jax.random.PRNGKey(cfg.seed)
         if params is None:
             params = self.model.init(jax.random.PRNGKey(cfg.seed))
 
@@ -132,37 +139,42 @@ class FederatedSimulator:
             taus = np.clip(taus, 1, cfg.tau_max)
         state = self.controller.init_state()
         scaffold = None
-        if cfg.mode == "scaffold":
-            zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
-            zC = jax.tree.map(lambda x: jnp.zeros((self.C,) + x.shape, jnp.float32), params)
-            scaffold = ScaffoldState(c=zeros, c_i=zC)
         gprev_sqnorm = jnp.zeros((), jnp.float32)
         tau_all = 0
+        cohort_stats = CohortStats(self.C)
 
         for k in range(rounds):
-            batches = self._sample_batches(rng)
-            params, stats, scaffold = self.round_step(
-                params, batches, jnp.asarray(taus), jnp.asarray(self.p),
-                gprev_sqnorm, scaffold,
+            cohort = self.engine.sample_cohort(rng)
+            key, sub = jax.random.split(key)
+            batches = self._host_batches(rng) if cfg.data_path == "host" else None
+            params, stats, scaffold = self.engine.run_round(
+                params, taus, self.p, gprev_sqnorm,
+                key=sub, batches=batches, scaffold=scaffold, cohort=cohort,
             )
-            tau_all += int(np.sum(taus))
+
+            # scatter cohort stats into the full per-client view
+            members = cohort if cohort is not None else np.arange(self.C)
+            p_round = self.p[members] / self.p[members].sum()
+            full_stats = cohort_stats.scatter(stats, members, taus)
+            tau_all += int(np.sum(np.asarray(taus)[members]))
             diag: Dict[str, Any] = {}
             if cfg.mode == "fedveca":
-                state, taus, diag = self.controller.update(state, stats)
+                state, taus, diag = self.controller.update(state, full_stats)
             else:
                 # still track L for premise logging parity
-                state, _, diag = self.controller.update(state, stats)
+                state, _, diag = self.controller.update(state, full_stats)
             gprev_sqnorm = tree_sqnorm(stats.global_grad)
 
             row = dict(
                 round=k,
                 mode=cfg.mode,
-                train_loss=float(jnp.sum(jnp.asarray(self.p) * stats.loss0)),
-                tau=np.array(stats.tau),
+                train_loss=float(np.sum(p_round * np.asarray(stats.loss0))),
+                tau=np.asarray(taus).copy(),
                 tau_k=float(stats.tau_k),
                 tau_all=tau_all,
-                beta=np.array(stats.beta),
-                delta=np.array(stats.delta),
+                beta=cohort_stats.vals["beta"].copy(),
+                delta=cohort_stats.vals["delta"].copy(),
+                cohort=None if cohort is None else np.asarray(cohort).copy(),
                 A=diag.get("A"),
                 L=diag.get("L"),
                 premise=diag.get("premise"),
@@ -200,12 +212,7 @@ def centralized_sgd(model, data: Dataset, iterations: int, batch: int, eta: floa
 
     for _ in range(iterations):
         idx = rng.randint(0, len(data), size=batch)
-        if data.x.dtype in (np.int32, np.int64):
-            b = dict(tokens=jnp.asarray(data.x[idx, :-1], jnp.int32),
-                     targets=jnp.asarray(data.x[idx, 1:], jnp.int32))
-        else:
-            b = dict(x=jnp.asarray(data.x[idx], jnp.float32), y=jnp.asarray(data.y[idx], jnp.int32))
-        params, _ = step(params, b)
+        params, _ = step(params, format_batch(data.x[idx], data.y[idx]))
     sim = FederatedSimulator.__new__(FederatedSimulator)
     sim.model = model
     sim.test_data = test_data

@@ -1,9 +1,12 @@
 """Public op: FedVeca aggregation over a pytree of stacked client grads.
 
-Flattens the [C, ...] gradient pytree into [C, D] blocks, runs the fused
-Pallas kernel per leaf, and re-assembles — plus a convenience wrapper that
-matches ref.py on raw matrices. On CPU the kernel runs in interpret mode;
-on TPU it compiles natively (interpret=None -> auto).
+Flattens the [C, ...] gradient pytree into ONE [C, D_total] buffer and runs
+a single fused Pallas pass over it — one kernel launch and one grid for the
+whole model instead of one launch per leaf (small leaves used to waste most
+of their last block; see benchmarks/kernels_micro.py for the fused-vs-
+per-leaf numbers) — plus a convenience wrapper that matches ref.py on raw
+matrices. On CPU the kernel runs in interpret mode; on TPU it compiles
+natively (interpret=None -> auto).
 """
 from __future__ import annotations
 
@@ -27,18 +30,24 @@ def vecavg(u, p, scale, *, use_pallas: bool = True, block_d: int = 512):
     return vecavg_pallas(u, p, scale, block_d=block_d, interpret=_auto_interpret())
 
 
-def vecavg_tree(grads_stacked: Any, p, scale, *, use_pallas: bool = True) -> Tuple[Any, jax.Array]:
+def vecavg_tree(grads_stacked: Any, p, scale, *, use_pallas: bool = True,
+                block_d: int = 512) -> Tuple[Any, jax.Array]:
     """Pytree form: leaves [C, ...] -> (delta_w pytree, sqnorms [C]).
 
-    sqnorms aggregates over all leaves (the full-model client norm).
+    All leaves are flattened and concatenated into one [C, D_total] matrix
+    (fp32 accumulation) so the reduction is a single kernel launch with a
+    single padded block tail; outputs are split back and cast to each
+    leaf's dtype. sqnorms aggregates over all leaves (the full-model
+    client norm).
     """
     leaves, treedef = jax.tree.flatten(grads_stacked)
     C = leaves[0].shape[0]
-    outs = []
-    total_sqn = jnp.zeros((C,), jnp.float32)
-    for leaf in leaves:
-        mat = leaf.reshape(C, -1)
-        dw, sqn = vecavg(mat, p, scale, use_pallas=use_pallas)
-        outs.append(dw.reshape(leaf.shape[1:]))
-        total_sqn = total_sqn + sqn
-    return jax.tree.unflatten(treedef, outs), total_sqn
+    flat = [leaf.reshape(C, -1).astype(jnp.float32) for leaf in leaves]
+    widths = [f.shape[1] for f in flat]
+    mat = flat[0] if len(flat) == 1 else jnp.concatenate(flat, axis=1)
+    dw, sqn = vecavg(mat, p, scale, use_pallas=use_pallas, block_d=block_d)
+    outs, off = [], 0
+    for leaf, w in zip(leaves, widths):
+        outs.append(dw[off:off + w].reshape(leaf.shape[1:]).astype(leaf.dtype))
+        off += w
+    return jax.tree.unflatten(treedef, outs), sqn

@@ -10,7 +10,10 @@ examples and CI exercise it.
 
 Flags mirror the dry-run: --arch selects the assigned architecture,
 --mode fedveca|fednova|fedavg the aggregation rule, --tau-max the local
-step budget. Data: synthetic Non-IID topic streams (per-client topics).
+step budget. Data: synthetic Non-IID topic streams (per-client topics),
+held device-resident and sampled inside the jitted round (RoundEngine;
+--host-data re-enables the legacy per-round upload for comparison).
+--cohort m sub-samples m participating clients per round.
 """
 from __future__ import annotations
 
@@ -22,13 +25,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core.controller import ControllerConfig, FedVecaController
+from repro.configs.base import ShapeConfig
+from repro.core.controller import CohortStats, ControllerConfig, FedVecaController
+from repro.core.engine import EngineConfig, RoundEngine
 from repro.core.tree import tree_sqnorm
+from repro.data.device import DeviceShards, host_stacked_batches
 from repro.data.synthetic import make_lm_tokens
 from repro.launch.mesh import make_host_mesh, make_production_mesh, num_clients
 from repro.models.model import build_model
-from repro.train.steps import build_bundle
-from repro.configs.base import ShapeConfig
+from repro.sharding.api import logical_axis_rules
 
 
 def main():
@@ -42,6 +47,12 @@ def main():
     ap.add_argument("--alpha", type=float, default=0.95)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch-per-client", type=int, default=2)
+    ap.add_argument("--cohort", type=int, default=None,
+                    help="participating clients per round (default: all)")
+    ap.add_argument("--aggregator", default="auto",
+                    choices=("auto", "pallas", "fallback"))
+    ap.add_argument("--host-data", action="store_true",
+                    help="legacy path: build batches on host, upload per round")
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 pod mesh (requires 256 devices)")
     ap.add_argument("--data-axis", type=int, default=2)
@@ -60,10 +71,26 @@ def main():
     C = num_clients(mesh)
     shape = ShapeConfig("cli", args.seq, C * args.batch_per_client, "train")
     print(f"arch={cfg.name} mesh={dict(mesh.shape)} clients={C} "
-          f"global_batch={shape.global_batch} seq={shape.seq_len}")
+          f"global_batch={shape.global_batch} seq={shape.seq_len} "
+          f"data={'host' if args.host_data else 'device'} "
+          f"cohort={args.cohort or C}")
 
-    bundle = build_bundle(model, mesh, shape, tau_max=args.tau_max,
-                          eta=args.eta, mode=args.mode)
+    datasets = [
+        make_lm_tokens(64, args.seq, cfg.vocab_size, topic=i, seed=0) for i in range(C)
+    ]
+    # Inside the federated round the mesh data axes are consumed by the
+    # CLIENT dimension; per-client activation batches should NOT claim them.
+    engine = RoundEngine(
+        model.loss,
+        EngineConfig(
+            mode=args.mode, eta=args.eta, tau_max=args.tau_max,
+            batch_size=args.batch_per_client, cohort_size=args.cohort,
+            aggregator=args.aggregator,
+        ),
+        shards=None if args.host_data else DeviceShards.from_datasets(datasets),
+        num_clients=C,
+        context=lambda: logical_axis_rules(mesh, {"batch": None}),
+    )
     ctl = FedVecaController(
         ControllerConfig(eta=args.eta, alpha=args.alpha, tau_max=args.tau_max),
         C,
@@ -74,29 +101,31 @@ def main():
     state = ctl.init_state()
     gprev = jnp.float32(0.0)
     rng = np.random.RandomState(0)
-    datasets = [
-        make_lm_tokens(64, args.seq, cfg.vocab_size, topic=i, seed=0) for i in range(C)
-    ]
+    key = jax.random.PRNGKey(0)
     p = jnp.full((C,), 1.0 / C, jnp.float32)
+    cohort_stats = CohortStats(C)
 
     with mesh:
         for k in range(args.rounds):
-            toks = np.stack([
-                d.x[rng.randint(0, len(d.x), size=(args.tau_max, args.batch_per_client))]
-                for d in datasets
-            ])  # [C, tau_max, b, seq+1]
-            batches = dict(
-                tokens=jnp.asarray(toks[..., :-1], jnp.int32),
-                targets=jnp.asarray(toks[..., 1:], jnp.int32),
+            cohort = engine.sample_cohort(rng)
+            key, sub = jax.random.split(key)
+            batches = (
+                host_stacked_batches(datasets, rng, args.tau_max,
+                                     args.batch_per_client)
+                if args.host_data
+                else None
             )
             t0 = time.time()
-            params, stats = bundle.fn(
-                params, batches, jnp.asarray(np.minimum(taus, args.tau_max)),
-                p, gprev,
+            params, stats, _ = engine.run_round(
+                params, np.minimum(taus, args.tau_max), p, gprev,
+                key=sub, batches=batches, cohort=cohort,
             )
             dt = time.time() - t0
             if args.mode == "fedveca":
-                state, taus, diag = ctl.update(state, stats)
+                members = cohort if cohort is not None else np.arange(C)
+                full_stats = cohort_stats.scatter(stats, members,
+                                                  np.minimum(taus, args.tau_max))
+                state, taus, diag = ctl.update(state, full_stats)
             gprev = tree_sqnorm(stats.global_grad)
             print(f"round {k}: loss={float(jnp.mean(stats.loss0)):.4f} "
                   f"tau_k={float(stats.tau_k):.2f} tau_next={list(taus)} "

@@ -1,0 +1,252 @@
+"""RoundEngine correctness: engine rounds vs the literal Alg. 1/2 oracle
+(core/aggregation.reference_round) on both aggregation paths, cohort
+sub-sampling semantics, donation stability, and the device data path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import reference_round
+from repro.core.engine import EngineConfig, RoundEngine
+from repro.data.device import DeviceShards, host_stacked_batches
+from repro.data.synthetic import Dataset, binarize_even_odd, make_classification
+from repro.models.model import build_model_by_name
+
+C, TAU_MAX, B = 3, 5, 8
+
+
+@pytest.fixture(scope="module")
+def svm():
+    return build_model_by_name("svm-mnist")
+
+
+@pytest.fixture(scope="module")
+def round_inputs(svm):
+    params = svm.init(jax.random.PRNGKey(0))
+    r = np.random.RandomState(0)
+    batches = dict(
+        x=jnp.asarray(r.randn(C, TAU_MAX, B, 784), jnp.float32),
+        y=jnp.asarray(r.randint(0, 2, (C, TAU_MAX, B)), jnp.int32),
+    )
+    tau = np.array([5, 2, 3], np.int32)
+    p = np.array([0.5, 0.2, 0.3], np.float32)
+    return params, batches, tau, p
+
+
+def _engine(svm, mode, aggregator, **kw):
+    return RoundEngine(
+        svm.loss,
+        EngineConfig(mode=mode, eta=0.01, tau_max=TAU_MAX, aggregator=aggregator,
+                     donate=False, **kw),
+        num_clients=C,
+    )
+
+
+@pytest.mark.parametrize("mode", ["fedveca", "fednova", "fedavg"])
+@pytest.mark.parametrize("aggregator", ["fallback", "pallas"])
+def test_engine_matches_reference(svm, round_inputs, mode, aggregator):
+    """Engine round == unvectorized oracle, leaf-for-leaf, both reduce paths."""
+    params, batches, tau, p = round_inputs
+    eng = _engine(svm, mode, aggregator)
+    new_p, stats, _ = eng.run_round(params, tau, p, 0.05, batches=batches)
+    ref_p, ref = reference_round(
+        svm.loss, params, batches, tau, p, 0.01, 0.05, mode=mode
+    )
+    for k in new_p:
+        np.testing.assert_allclose(np.asarray(new_p[k]), np.asarray(ref_p[k]),
+                                   atol=1e-6)
+    np.testing.assert_allclose(np.asarray(stats.beta), ref["beta"], rtol=1e-3,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(stats.delta), ref["delta"], rtol=1e-3,
+                               atol=1e-5)
+    assert abs(float(stats.tau_k) - ref["tau_k"]) < 1e-5
+    for k, rg in ref["global_grad"].items():
+        np.testing.assert_allclose(np.asarray(stats.global_grad[k]),
+                                   np.asarray(rg), atol=1e-6)
+
+
+@pytest.mark.parametrize("aggregator", ["fallback", "pallas"])
+def test_full_cohort_equals_no_cohort(svm, round_inputs, aggregator):
+    """m = C with weight renormalization must be a no-op vs full round."""
+    params, batches, tau, p = round_inputs
+    eng = _engine(svm, "fedveca", aggregator)
+    full, _, _ = eng.run_round(params, tau, p, 0.05, batches=batches)
+    coh, _, _ = eng.run_round(params, tau, p, 0.05, batches=batches,
+                              cohort=np.arange(C, dtype=np.int32))
+    for k in full:
+        np.testing.assert_allclose(np.asarray(full[k]), np.asarray(coh[k]),
+                                   atol=1e-7)
+
+
+def test_sub_cohort_matches_renormalized_reference(svm, round_inputs):
+    """m < C == the oracle run on the cohort with p renormalized."""
+    params, batches, tau, p = round_inputs
+    cohort = np.array([0, 2], np.int32)
+    eng = _engine(svm, "fedveca", "fallback")
+    new_p, stats, _ = eng.run_round(params, tau, p, 0.05, batches=batches,
+                                    cohort=cohort)
+    p_c = p[cohort] / p[cohort].sum()
+    batches_c = jax.tree.map(lambda x: x[cohort], batches)
+    ref_p, ref = reference_round(
+        svm.loss, params, batches_c, tau[cohort], p_c, 0.01, 0.05
+    )
+    for k in new_p:
+        np.testing.assert_allclose(np.asarray(new_p[k]), np.asarray(ref_p[k]),
+                                   atol=1e-6)
+    assert stats.beta.shape == (2,)
+    np.testing.assert_allclose(np.asarray(stats.beta), ref["beta"], rtol=1e-3,
+                               atol=1e-5)
+
+
+def test_donation_preserves_results_across_rounds(svm, round_inputs):
+    """3 consecutive donated rounds == 3 non-donated rounds, exactly."""
+    _, batches, tau, p = round_inputs
+    outs = {}
+    for donate in (False, True):
+        eng = RoundEngine(
+            svm.loss,
+            EngineConfig(mode="fedveca", eta=0.01, tau_max=TAU_MAX,
+                         aggregator="fallback", donate=donate),
+            num_clients=C,
+        )
+        params = svm.init(jax.random.PRNGKey(0))
+        gprev = 0.05
+        for _ in range(3):
+            params, stats, _ = eng.run_round(params, tau, p, gprev,
+                                             batches=batches)
+            gprev = float(jnp.sum(stats.g0_sqnorm))
+        outs[donate] = jax.tree.map(np.asarray, params)
+    for k in outs[True]:
+        np.testing.assert_array_equal(outs[True][k], outs[False][k])
+
+
+def test_device_path_samples_only_real_rows(svm):
+    """Device-resident sampling respects ragged shard sizes and is
+    deterministic in the key."""
+    orig = make_classification(90, (784,), 10, seed=0)
+    train = binarize_even_odd(orig)
+    # ragged shards: 50 / 30 / 10 samples
+    cuts = [slice(0, 50), slice(50, 80), slice(80, 90)]
+    ds = [Dataset(train.x[s], train.y[s]) for s in cuts]
+    # poison the padding region: a client must never sample another's rows
+    shards = DeviceShards.from_datasets(ds)
+    assert shards.x.shape == (3, 50, 784)
+    batch = shards.sample(shards.tree(), jax.random.PRNGKey(3), 4, 6)
+    assert batch["x"].shape == (3, 4, 6, 784)
+    # every sampled row of client i must appear in client i's shard
+    for i, d in enumerate(ds):
+        rows = np.asarray(batch["x"][i]).reshape(-1, 784)
+        dists = np.abs(rows[:, None, :] - d.x[None]).sum(-1).min(1)
+        np.testing.assert_allclose(dists, 0.0, atol=1e-6)
+    again = shards.sample(shards.tree(), jax.random.PRNGKey(3), 4, 6)
+    np.testing.assert_array_equal(np.asarray(batch["x"]), np.asarray(again["x"]))
+
+
+def test_device_and_host_paths_agree_statistically(svm):
+    """Both data paths drive the same jitted round; with identical batches
+    they are identical (the host path is just a different sampler)."""
+    orig = make_classification(120, (784,), 10, seed=1)
+    train = binarize_even_odd(orig)
+    ds = [Dataset(train.x[i::3], train.y[i::3]) for i in range(3)]
+    params = svm.init(jax.random.PRNGKey(1))
+    rng = np.random.RandomState(0)
+    batches = host_stacked_batches(ds, rng, 3, 4)
+    eng_host = RoundEngine(
+        svm.loss, EngineConfig(eta=0.01, tau_max=3, donate=False), num_clients=3
+    )
+    eng_dev = RoundEngine(
+        svm.loss, EngineConfig(eta=0.01, tau_max=3, batch_size=4, donate=False),
+        shards=DeviceShards.from_datasets(ds),
+    )
+    tau = np.array([3, 2, 1], np.int32)
+    p = np.full(3, 1 / 3, np.float32)
+    p_host, _, _ = eng_host.run_round(params, tau, p, 0.0, batches=batches)
+    p_dev, st, _ = eng_dev.run_round(params, tau, p, 0.0,
+                                     key=jax.random.PRNGKey(0))
+    # same program, different minibatch draws: same structure, finite, close
+    for k in p_host:
+        a, b = np.asarray(p_host[k]), np.asarray(p_dev[k])
+        assert a.shape == b.shape
+        assert np.isfinite(a).all() and np.isfinite(b).all()
+    assert np.isfinite(np.asarray(st.loss0)).all()
+
+
+def test_cohort_stats_fill_never_observed_with_mean():
+    """Unobserved clients must NOT read as beta=delta=0 (A=0 would steal
+    tau_max for them and collapse participants to tau_min in Eq. 15)."""
+    from repro.core.controller import CohortStats
+    from repro.core.fedveca import RoundStats
+
+    cs = CohortStats(4)
+    stats = RoundStats(
+        loss0=jnp.array([1.0, 2.0]), beta=jnp.array([2.0, 4.0]),
+        delta=jnp.array([1.0, 3.0]), g0_sqnorm=jnp.array([1.0, 1.0]),
+        tau=jnp.array([2, 2]), tau_k=jnp.float32(2.0), global_grad={},
+        update_sqnorm=jnp.float32(0.1), params_sqnorm=jnp.float32(1.0),
+    )
+    full = cs.scatter(stats, np.array([1, 3]), np.array([2, 2, 2, 2]))
+    np.testing.assert_allclose(np.asarray(full.beta), [3.0, 2.0, 3.0, 4.0])
+    np.testing.assert_allclose(np.asarray(full.delta), [2.0, 1.0, 2.0, 3.0])
+    # once observed, the real value sticks and fills update
+    stats2 = stats._replace(beta=jnp.array([8.0, 4.0]))
+    full2 = cs.scatter(stats2, np.array([0, 3]), np.array([2, 2, 2, 2]))
+    np.testing.assert_allclose(np.asarray(full2.beta), [8.0, 2.0, 14.0 / 3, 4.0])
+
+
+def test_scaffold_cohort_keeps_client_aligned_variates(svm, round_inputs):
+    """c_i rows belong to client ids: a round over cohort [0,2] must leave
+    client 1's control variate untouched, and the jit must not retrace."""
+    params, batches, tau, p = round_inputs
+    eng = _engine(svm, "scaffold", "fallback")
+    scaffold = None
+    params_out, _, scaffold = eng.run_round(params, tau, p, 0.0,
+                                            batches=batches,
+                                            cohort=np.array([0, 2], np.int32))
+    for leaf in jax.tree.leaves(scaffold.c_i):
+        assert leaf.shape[0] == C  # full-C state, not cohort-sized
+        np.testing.assert_array_equal(np.asarray(leaf[1]),
+                                      np.zeros_like(np.asarray(leaf[1])))
+        assert float(jnp.sum(jnp.abs(leaf[0]))) > 0  # participant updated
+    # second round, different cohort: same trace, client-0 rows persist
+    before = np.asarray(jax.tree.leaves(scaffold.c_i)[0][0]).copy()
+    _, _, scaffold2 = eng.run_round(params_out, tau, p, 0.0, batches=batches,
+                                    scaffold=scaffold,
+                                    cohort=np.array([1, 2], np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(scaffold2.c_i)[0][0]), before
+    )
+
+
+def test_scaffold_single_trace_across_rounds(svm, round_inputs):
+    """None -> ScaffoldState must not retrace: the engine materializes the
+    zero state up front (one compile covers every round)."""
+    params, batches, tau, p = round_inputs
+    eng = _engine(svm, "scaffold", "fallback")
+    scaffold = None
+    for _ in range(3):
+        params, _, scaffold = eng.run_round(params, tau, p, 0.0,
+                                            batches=batches, scaffold=scaffold)
+    cache_size = getattr(eng._step, "_cache_size", lambda: 1)()
+    assert cache_size == 1, f"round retraced: {cache_size} entries"
+
+
+def test_empty_cohort_rejected(svm):
+    """cohort_size=0 would silently train nothing; must be refused."""
+    with pytest.raises(ValueError, match="cohort_size"):
+        RoundEngine(svm.loss, EngineConfig(cohort_size=0), num_clients=C)
+
+
+def test_scaffold_and_fedprox_through_engine(svm, round_inputs):
+    params, batches, tau, p = round_inputs
+    for mode, kw in [("fedprox", dict(mu=0.1)), ("scaffold", {})]:
+        eng = _engine(svm, mode, "fallback", **kw)
+        scaffold = None
+        for _ in range(2):
+            params_out, stats, scaffold = eng.run_round(
+                params, tau, p, 0.0, batches=batches, scaffold=scaffold
+            )
+        assert all(bool(jnp.all(jnp.isfinite(l)))
+                   for l in jax.tree.leaves(params_out))
+        if mode == "scaffold":
+            assert scaffold is not None
