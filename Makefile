@@ -1,10 +1,13 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test ci smoke bench-round-engine
+.PHONY: test collect ci smoke bench-round-engine bench-controller-driver
 
 test:
 	python -m pytest -x -q
+
+collect:
+	python -m pytest --collect-only -q
 
 smoke:
 	python examples/quickstart.py --rounds 3
@@ -14,3 +17,6 @@ ci:
 
 bench-round-engine:
 	python -m benchmarks.run --only round_engine
+
+bench-controller-driver:
+	python benchmarks/controller_driver.py --smoke

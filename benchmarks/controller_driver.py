@@ -1,0 +1,210 @@
+"""Controller/driver benchmark: per-round host-blocked time, sync vs
+overlapped, at C in {8, 32, 128} (SVM config, partial participation).
+
+Three series over identical round programs:
+
+  * ``sync_simulator``  — the legacy loop: ``RoundEngine.run_round`` +
+    host-side ``CohortStats`` scatter + the numpy ``FedVecaController``
+    and a blocking eval every round. The host must sync on the round's
+    statistics before it can predict the next taus — the exact bottleneck
+    the fused controller removes.
+  * ``driver_sync``     — ``TrainDriver(overlap=0)``: controller fused
+    on device, but every round finalized (host-synced) before the next
+    dispatch. Isolates the fusion win from the overlap win.
+  * ``driver_overlap``  — ``TrainDriver(overlap=1)``: round k+1 sampled
+    and dispatched while round k's diagnostics are still in flight.
+
+host_blocked = time the loop spends waiting on device->host transfers
+(stats/diag fetches, controller math on fetched stats, eval scalars).
+Emits one JSON row per (C, series) on stdout and appends them to
+``experiments/controller_driver.jsonl``.
+
+    PYTHONPATH=src python benchmarks/controller_driver.py [--smoke]
+    PYTHONPATH=src python -m benchmarks.run --only controller_driver
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.controller import (  # noqa: E402
+    CohortStats,
+    ControllerConfig,
+    ControllerCore,
+    FedVecaController,
+)
+from repro.core.driver import TrainDriver, make_dataset_evaluator  # noqa: E402
+from repro.core.engine import EngineConfig, RoundEngine  # noqa: E402
+from repro.data.device import DeviceShards, format_batch  # noqa: E402
+from repro.data.partition import partition_iid  # noqa: E402
+from repro.data.synthetic import (  # noqa: E402
+    Dataset,
+    binarize_even_odd,
+    make_classification,
+)
+from repro.models.model import build_model_by_name  # noqa: E402
+
+N_PER_CLIENT = 128
+TAU_MAX, BATCH = 5, 16
+ETA = 0.05
+
+
+def _setup(C: int):
+    orig = make_classification(C * N_PER_CLIENT, (784,), 10, seed=C)
+    train = binarize_even_odd(orig)
+    parts = partition_iid(len(train.y), C, seed=0)
+    clients = [Dataset(train.x[s], train.y[s]) for s in parts]
+    test = binarize_even_odd(make_classification(512, (784,), 10, seed=C + 1))
+    model = build_model_by_name("svm-mnist")
+    p = np.full(C, 1.0 / C, np.float32)
+    cohort = max(2, C // 4)
+    return model, clients, test, p, cohort
+
+
+def _engine(model, clients, C, cohort, controller=None):
+    return RoundEngine(
+        model.loss,
+        EngineConfig(mode="fedveca", eta=ETA, tau_max=TAU_MAX, batch_size=BATCH,
+                     cohort_size=cohort),
+        shards=DeviceShards.from_datasets(clients),
+        num_clients=C,
+        controller=controller,
+    )
+
+
+# ---------------------------------------------------------------------------
+# legacy: host controller, blocking stats fetch + eval every round
+# ---------------------------------------------------------------------------
+
+
+def bench_sync_simulator(model, clients, test, p, C, cohort, rounds):
+    ctl_cfg = ControllerConfig(eta=ETA, tau_max=TAU_MAX)
+    eng = _engine(model, clients, C, cohort)
+    eval_fn = jax.jit(model.loss)
+    test_batch = format_batch(test.x, test.y)
+
+    def run(rounds):
+        ctl = FedVecaController(ctl_cfg, C)
+        cs = CohortStats(C, decay=ctl_cfg.decay)
+        rng = np.random.default_rng(0)
+        key = jax.random.PRNGKey(0)
+        params = model.init(jax.random.PRNGKey(0))
+        taus, state, gprev = ctl.init_taus(), ctl.init_state(), 0.0
+        blocked = 0.0
+        t_wall = time.perf_counter()
+        for _ in range(rounds):
+            members = eng.sample_cohort(rng)
+            key, sub = jax.random.split(key)
+            params, stats, _ = eng.run_round(params, taus, p, gprev,
+                                             key=sub, cohort=members)
+            t0 = time.perf_counter()
+            ids = members if members is not None else np.arange(C)
+            full = cs.scatter(stats, ids, taus)  # device->host sync
+            state, taus, _ = ctl.update(state, full)
+            gprev = float(stats.global_grad_sqnorm)
+            loss, _ = eval_fn(params, test_batch)
+            float(loss)  # blocking eval readback
+            blocked += time.perf_counter() - t0
+        jax.block_until_ready(params)
+        return blocked, time.perf_counter() - t_wall
+
+    run(3)  # compile + warmup (round >= 2 hits the L-estimation branch)
+    return run(rounds)
+
+
+# ---------------------------------------------------------------------------
+# fused controller through the driver, sync and overlapped
+# ---------------------------------------------------------------------------
+
+
+def bench_driver(model, clients, test, p, C, cohort, rounds, overlap):
+    ctl_cfg = ControllerConfig(eta=ETA, tau_max=TAU_MAX)
+    eng = _engine(model, clients, C, cohort,
+                  controller=ControllerCore(ctl_cfg, C))
+    driver = TrainDriver(
+        eng, p, overlap=overlap, seed=0,
+        eval_fn=make_dataset_evaluator(model.loss, test), eval_every=1,
+    )
+    taus = np.full(C, 2, np.int32)
+
+    def run(rounds):
+        params = model.init(jax.random.PRNGKey(0))
+        t_wall = time.perf_counter()
+        driver.run(params, rounds, taus)
+        return driver.host_blocked_s, time.perf_counter() - t_wall
+
+    run(3)  # compile + warmup (round >= 2 hits the L-estimation branch)
+    return run(rounds)
+
+
+# ---------------------------------------------------------------------------
+
+
+def run(scale=None, out_rows: list = None, csv_dir=None, *,
+        sizes=(8, 32, 128), rounds=20, json_path=None):
+    rows = out_rows if out_rows is not None else []
+    json_rows = []
+    for C in sizes:
+        model, clients, test, p, cohort = _setup(C)
+        series = {
+            "sync_simulator": lambda: bench_sync_simulator(
+                model, clients, test, p, C, cohort, rounds),
+            "driver_sync": lambda: bench_driver(
+                model, clients, test, p, C, cohort, rounds, overlap=0),
+            "driver_overlap": lambda: bench_driver(
+                model, clients, test, p, C, cohort, rounds, overlap=1),
+        }
+        base = None
+        for name, fn in series.items():
+            blocked, wall = fn()
+            blocked_ms = 1e3 * blocked / rounds
+            wall_ms = 1e3 * wall / rounds
+            if name == "sync_simulator":
+                base = blocked_ms
+            jrow = dict(
+                bench="controller_driver", C=C, series=name, rounds=rounds,
+                cohort=cohort,
+                host_blocked_ms_per_round=round(blocked_ms, 4),
+                wall_ms_per_round=round(wall_ms, 4),
+                host_blocked_vs_sync_simulator=round(blocked_ms / base, 4),
+            )
+            json_rows.append(jrow)
+            print(json.dumps(jrow))
+            rows.append(dict(
+                name=f"controller_driver/{name}/C{C}",
+                us_per_call=1e3 * blocked_ms,
+                derived=f"wall_ms={wall_ms:.2f}|vs_sync={blocked_ms / base:.2f}x",
+            ))
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "a") as f:
+            for jrow in json_rows:
+                f.write(json.dumps(jrow) + "\n")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: C in {8, 32}, few rounds")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--json", default="experiments/controller_driver.jsonl")
+    args = ap.parse_args()
+    sizes = (8, 32) if args.smoke else (8, 32, 128)
+    rounds = args.rounds or (6 if args.smoke else 20)
+    run(sizes=sizes, rounds=rounds, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

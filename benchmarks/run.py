@@ -16,6 +16,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (  # noqa: E402
     beyond_paper,
+    controller_driver,
     fig3_loss_accuracy,
     fig4_premise,
     fig5_cases,
@@ -39,6 +40,7 @@ BENCHES = {
     "beyond": beyond_paper.run,
     "roofline": roofline.run,
     "round_engine": round_engine.run,
+    "controller_driver": controller_driver.run,
 }
 
 

@@ -29,6 +29,8 @@ def main():
                     help="server reduce: Pallas vecavg kernel or XLA fallback")
     ap.add_argument("--data-path", default="device", choices=("device", "host"),
                     help="device-resident shards vs legacy host-built batches")
+    ap.add_argument("--overlap", type=int, default=1,
+                    help="rounds in flight before host sync (0 = sync mode)")
     args = ap.parse_args()
 
     print(f"== FedVeca quickstart: SVM / Case {args.case} / {args.clients} clients ==")
@@ -46,7 +48,8 @@ def main():
 
     cfg = FedSimConfig(mode="fedveca", rounds=args.rounds, tau_max=args.tau_max,
                        batch_size=16, eta=args.eta, cohort_size=args.cohort,
-                       aggregator=args.aggregator, data_path=args.data_path)
+                       aggregator=args.aggregator, data_path=args.data_path,
+                       overlap=args.overlap)
     veca = FederatedSimulator(model, clients, cfg, test).run()
     print("\nround  loss    acc    tau (adaptive)            eta*tau_k*L")
     for r in veca.rows[:: max(1, args.rounds // 10)]:
@@ -61,7 +64,7 @@ def main():
         bcfg = FedSimConfig(mode=mode, rounds=args.rounds, tau_max=args.tau_max,
                             batch_size=16, eta=args.eta, fixed_tau=ft,
                             cohort_size=args.cohort, aggregator=args.aggregator,
-                            data_path=args.data_path)
+                            data_path=args.data_path, overlap=args.overlap)
         results[mode] = FederatedSimulator(model, clients, bcfg, test).run().rows[-1]
     pooled = Dataset(np.concatenate([c.x for c in clients]),
                      np.concatenate([c.y for c in clients]))

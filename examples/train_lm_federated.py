@@ -56,6 +56,8 @@ def main():
                     help="participating clients per round (default: all)")
     ap.add_argument("--data-path", default="device", choices=("device", "host"),
                     help="device-resident shards vs legacy host-built batches")
+    ap.add_argument("--overlap", type=int, default=1,
+                    help="rounds in flight before host sync (0 = sync mode)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
@@ -77,6 +79,7 @@ def main():
         mode=args.mode, eta=args.eta, tau_max=args.tau_max, batch_size=args.batch,
         rounds=args.rounds, seed=args.seed, eval_every=5,
         log_dir=args.ckpt_dir, cohort_size=args.cohort, data_path=args.data_path,
+        overlap=args.overlap,
     )
     sim = FederatedSimulator(model, clients, fed_cfg, test)
 

@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 CI: the repo's own test suite + a real end-to-end smoke.
-#   scripts/ci.sh          # tests + quickstart smoke
-#   scripts/ci.sh tests    # tests only
+#   scripts/ci.sh          # collect sanity + tests + quickstart + bench smokes
+#   scripts/ci.sh tests    # collect sanity + tests only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest collect sanity =="
+python -m pytest --collect-only -q
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q
@@ -13,5 +16,7 @@ python -m pytest -x -q
 if [ "${1:-all}" = "all" ]; then
   echo "== smoke: examples/quickstart.py =="
   python examples/quickstart.py --rounds 3
+  echo "== smoke: benchmarks/controller_driver.py =="
+  python benchmarks/controller_driver.py --smoke
 fi
 echo "CI OK"

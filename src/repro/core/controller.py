@@ -1,10 +1,20 @@
 """FedVeca server controller (Algorithm 1): L estimation, A_(k,i),
 Theorem-2 step-size bounds, Eq. (15) tau prediction, premise check.
 
-Host-side scalar math between rounds; everything heavy stays in the jitted
-round step (core/fedveca.py). The controller consumes ONLY RoundStats —
-norms and the global-gradient pytree — never raw parameters, so the round
-step can donate its parameter buffers (in-place update at 33B scale):
+Two implementations of the same control law live here (DESIGN.md §10):
+
+  * ``ControllerCore`` — the production path: pure jax functions over a
+    device-resident ``CoreState`` (including the two retained
+    global-gradient pytrees), jit-fused with the round step by
+    ``core/engine.RoundEngine`` so a round returns only scalar
+    diagnostics to host and the next round's taus never leave device;
+  * ``FedVecaController`` + ``CohortStats`` — the retained numpy oracle:
+    host-side scalar math between rounds, kept as the readable reference
+    and the trace-for-trace test target for the jitted core.
+
+Both consume ONLY RoundStats — norms and the global-gradient pytree —
+never raw parameters, so the round step can donate its parameter buffers
+(in-place update at 33B scale):
 
   * ||w_{k-1} - w_{k-2}|| comes from the (k-2) round's update_sqnorm,
   * ||w_0|| from round 0's params_sqnorm,
@@ -12,17 +22,25 @@ step can donate its parameter buffers (in-place update at 33B scale):
     outputs (fresh, non-donated buffers),
 
 realizing the paper's one-round-delayed L estimate (Alg. 1 lines 11-16).
+
+The oracle's scalar math is deliberately float32 in the exact operation
+order of the device core: every op involved (mul/div/sqrt/floor/min/max)
+is correctly rounded in IEEE f32, so the two controllers produce the
+same tau sequences bit-for-bit (tested on recorded runs).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
+from typing import Any, Dict, NamedTuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fedveca import RoundStats
-from repro.core.tree import tree_norm, tree_sqnorm, tree_sub
+from repro.core.tree import tree_norm, tree_sqnorm, tree_sub, tree_zeros_like
+
+_STAT_KEYS = ("loss0", "beta", "delta", "g0_sqnorm")
 
 
 class CohortStats:
@@ -30,29 +48,50 @@ class CohortStats:
 
     The controller's Eq. 15 needs (beta, delta) for every client, but with
     a cohort only m <= C are observed per round. This scatters each round's
-    cohort stats into a persistent per-client view; clients never observed
-    so far are filled with the mean of the observed ones — NOT zeros, which
-    would poison A_min (A=0 collapses participants to tau_min and hands
-    tau_max to exactly the clients the server knows nothing about).
+    cohort stats into a persistent per-client view with a staleness model:
+
+      * clients never observed so far read the mean of the observed ones —
+        NOT zeros, which would poison A_min (A=0 collapses participants to
+        tau_min and hands tau_max to exactly the clients the server knows
+        nothing about);
+      * clients observed ``age`` rounds ago read
+        ``decay^age * last_seen + (1 - decay^age) * mean_observed`` — the
+        staleness weight decays multiplicatively (one f32 multiply per
+        round, mirrored exactly by the device core), so long-unobserved
+        clients degrade gracefully toward the cohort mean instead of
+        freezing at their last-seen beta/delta. ``decay=1.0`` recovers the
+        old freeze-at-last-seen behaviour; as age -> inf every stale
+        client converges to the same (uniform) mean fill.
     """
 
-    _keys = ("loss0", "beta", "delta", "g0_sqnorm")
+    _keys = _STAT_KEYS
 
-    def __init__(self, num_clients: int):
+    def __init__(self, num_clients: int, decay: float = 0.9):
+        if not 0.0 < decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {decay}")
         self.C = num_clients
+        self.decay = decay
         self.ever = np.zeros(num_clients, bool)
+        self.w = np.zeros(num_clients, np.float32)  # decay^age, 0 if never seen
         self.vals = {k: np.zeros(num_clients, np.float32) for k in self._keys}
 
     def scatter(self, stats: RoundStats, members: np.ndarray,
                 taus: np.ndarray) -> RoundStats:
         """Cohort-sized stats + this round's members -> full-C RoundStats."""
+        # age everyone one round, then reset this round's members
+        self.w *= np.float32(self.decay)
         for k in self._keys:
-            self.vals[k][members] = np.asarray(getattr(stats, k))
+            self.vals[k][members] = np.asarray(getattr(stats, k), np.float32)
         self.ever[members] = True
+        self.w[members] = 1.0
         out = {k: v.copy() for k, v in self.vals.items()}
-        if not self.ever.all():
-            for k in ("beta", "delta"):
-                out[k][~self.ever] = out[k][self.ever].mean()
+        ever_f = self.ever.astype(np.float32)
+        n_obs = np.maximum(np.sum(ever_f), np.float32(1.0))
+        for k in ("beta", "delta"):
+            # staleness-weighted pull toward the observed mean; never-seen
+            # clients (w=0, vals=0) read exactly the mean
+            mean_k = np.sum(out[k] * ever_f) / n_obs
+            out[k] = self.w * out[k] + (np.float32(1.0) - self.w) * mean_k
         return stats._replace(
             tau=jnp.asarray(taus),
             **{k: jnp.asarray(v) for k, v in out.items()},
@@ -67,6 +106,7 @@ class ControllerConfig:
     tau_init: int = 2
     tau_min: int = 2  # paper resets tau<=1 -> 2 (Alg. 1 lines 19-21)
     eps: float = 1e-12
+    decay: float = 0.9  # CohortStats staleness retention per round
 
 
 @dataclasses.dataclass
@@ -82,7 +122,7 @@ class ControllerState:
 
 
 class FedVecaController:
-    """Predicts tau_(k+1,i) from round-k statistics (Eq. 15)."""
+    """Predicts tau_(k+1,i) from round-k statistics (Eq. 15) — numpy oracle."""
 
     def __init__(self, cfg: ControllerConfig, num_clients: int):
         self.cfg = cfg
@@ -100,67 +140,84 @@ class FedVecaController:
         """Consume round-k stats (measured at w_k); emit tau for round k+1."""
         cfg = self.cfg
         k = state.round
+        eps = np.float32(cfg.eps)
 
         # ---- L estimation, one-round delay (Alg. 1 lines 11-16) ----------
         L_obs = None
         if k == 1 and state.prev_global_grad is not None:
             # L_0 = ||gF(w_0)|| / ||w_0||
-            L_obs = float(
-                np.sqrt(state.prev_grad_sqnorm)
-                / max(np.sqrt(state.params0_sqnorm), cfg.eps)
+            L_obs = np.sqrt(np.float32(state.prev_grad_sqnorm)) / np.maximum(
+                np.sqrt(np.float32(state.params0_sqnorm)), eps
             )
         elif k >= 2:
-            num = float(tree_norm(tree_sub(state.prev_global_grad, state.prev2_global_grad)))
-            den = float(np.sqrt(state.prev2_update_sqnorm))
-            L_obs = num / max(den, cfg.eps)
-        L = max(state.L, L_obs) if L_obs is not None else state.L
+            num = np.float32(
+                tree_norm(tree_sub(state.prev_global_grad, state.prev2_global_grad))
+            )
+            den = np.sqrt(np.float32(state.prev2_update_sqnorm))
+            L_obs = num / np.maximum(den, eps)
+        L = (
+            np.maximum(np.float32(state.L), L_obs)
+            if L_obs is not None
+            else np.float32(state.L)
+        )
 
         # ---- A_(k,i) = eta * beta^2 * delta (Theorem 1) -------------------
-        beta = np.asarray(stats.beta, np.float64)
-        delta = np.asarray(stats.delta, np.float64)
-        A = cfg.eta * np.square(beta) * delta  # [C]
+        beta = np.asarray(stats.beta, np.float32)
+        delta = np.asarray(stats.delta, np.float32)
+        A = np.float32(cfg.eta) * np.square(beta) * delta  # [C]
 
         diag: Dict[str, Any] = {
             "round": k,
-            "L": L,
+            "L": float(L),
             "A": A,
             "beta": beta,
             "delta": delta,
             "tau_k": float(stats.tau_k),
-            "premise": float(cfg.eta * float(stats.tau_k) * L),  # want >= 1
+            # want >= 1
+            "premise": float(np.float32(cfg.eta) * np.float32(stats.tau_k) * L),
         }
 
         # ---- Eq. (15): tau prediction -------------------------------------
-        if k < 1 or not np.all(np.isfinite(A)) or np.all(A <= cfg.eps):
+        if k < 1 or not np.all(np.isfinite(A)) or not np.any(A > eps):
             # round 0: no (beta, delta) yet (Alg. 1 runs from k >= 1)
             tau_next = np.asarray(stats.tau, np.int32).copy()
         else:
-            A_safe = np.maximum(A, cfg.eps)
-            A_min = float(A_safe.min())
+            A_safe = np.maximum(A, eps)
+            A_min = A_safe.min()
             # Theorem 2 constraint on alpha_k:
             #   alpha in (0, 2L/min_i A)  when 2L/min_i A < 1, else (0, 1)
-            bound = 2.0 * L / max(A_min, cfg.eps)
-            alpha_k = min(cfg.alpha, 0.999 * bound if bound < 1.0 else cfg.alpha)
+            bound = np.float32(2.0) * L / np.maximum(A_min, eps)
+            alpha = np.float32(cfg.alpha)
+            alpha_k = (
+                np.minimum(alpha, np.float32(0.999) * bound)
+                if bound < 1.0
+                else alpha
+            )
             denom = A_safe - alpha_k * A_min
             # direction of the bi-directional vector (Sec. III-A): the sign
             # of (A_i - alpha_k * min_j A_j); negative => unbounded tau
             direction = np.sign(denom)
-            tau_next = np.where(
-                denom > cfg.eps,
-                np.floor(A_safe / np.maximum(denom, cfg.eps)),
-                cfg.tau_max,
+            tau_f = np.where(
+                denom > eps,
+                np.floor(A_safe / np.maximum(denom, eps)),
+                np.float32(cfg.tau_max),
             )
-            tau_next = np.where(tau_next <= 1, cfg.tau_min, tau_next)  # Alg.1 19-21
-            tau_next = np.clip(tau_next, cfg.tau_min, cfg.tau_max).astype(np.int32)
-            diag["alpha_k"] = alpha_k
+            tau_f = np.where(tau_f <= 1.0, np.float32(cfg.tau_min), tau_f)  # 19-21
+            tau_next = np.clip(tau_f, cfg.tau_min, cfg.tau_max).astype(np.int32)
+            diag["alpha_k"] = float(alpha_k)
             diag["direction"] = direction
 
+        grad_sqnorm = (
+            stats.global_grad_sqnorm
+            if stats.global_grad_sqnorm is not None
+            else tree_sqnorm(stats.global_grad)
+        )
         new_state = ControllerState(
             round=k + 1,
-            L=L,
+            L=float(L),
             prev_global_grad=stats.global_grad,
             prev2_global_grad=state.prev_global_grad,
-            prev_grad_sqnorm=float(tree_sqnorm(stats.global_grad)),
+            prev_grad_sqnorm=float(grad_sqnorm),
             params0_sqnorm=(
                 float(stats.params_sqnorm) if k == 0 else state.params0_sqnorm
             ),
@@ -169,3 +226,176 @@ class FedVecaController:
         )
         diag["tau_next"] = tau_next
         return new_state, tau_next, diag
+
+
+# ---------------------------------------------------------------------------
+# device-resident controller core
+# ---------------------------------------------------------------------------
+
+
+class CoreState(NamedTuple):
+    """Alg. 1 server state + the per-client statistics view, all on device.
+
+    The two retained global-gradient pytrees (the one-round-delay L
+    estimate's working set) live here instead of on host; the engine
+    donates the whole state to the fused step, so they are updated in
+    place. ``vals``/``ever``/``stale_w`` are the device twin of
+    ``CohortStats``; ``taus`` is the tau vector the NEXT round will use.
+    """
+
+    round: jax.Array  # int32 scalar, k
+    L: jax.Array  # f32 scalar, running max L estimate
+    prev_global_grad: Any  # grad F(w_{k-1}) pytree
+    prev2_global_grad: Any  # grad F(w_{k-2}) pytree
+    prev_grad_sqnorm: jax.Array  # f32 ||grad F(w_{k-1})||^2
+    params0_sqnorm: jax.Array  # f32 ||w_0||^2
+    prev_update_sqnorm: jax.Array  # f32 ||w_k - w_{k-1}||^2
+    prev2_update_sqnorm: jax.Array  # f32 ||w_{k-1} - w_{k-2}||^2
+    taus: jax.Array  # [C] int32 taus for the upcoming round
+    ever: jax.Array  # [C] bool, observed at least once
+    stale_w: jax.Array  # [C] f32 decay^age (multiplicative, exact)
+    vals: Dict[str, jax.Array]  # last-seen per-client stats, [C] f32 each
+
+
+class ControllerCore:
+    """Jitted twin of CohortStats + FedVecaController (DESIGN.md §10).
+
+    ``step`` is pure jax: it scatters a cohort's RoundStats into the
+    full-C view, applies the staleness weighting, and runs the Alg. 1
+    update (L estimate, Theorem-2 alpha clamp, Eq. 15 tau prediction)
+    entirely on device. ``adapt=False`` keeps taus fixed (FedAvg/FedNova
+    baselines) while still tracking L for premise logging parity.
+    """
+
+    def __init__(self, cfg: ControllerConfig, num_clients: int, *,
+                 adapt: bool = True):
+        if not 0.0 < cfg.decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {cfg.decay}")
+        self.cfg = cfg
+        self.C = num_clients
+        self.adapt = adapt
+
+    def init_state(self, params_like: Any, taus: np.ndarray) -> CoreState:
+        """Fresh round-0 state; ``params_like`` fixes the gradient trees'
+        structure (zeros, so the k=1/k=2 L branches are NaN-free)."""
+        # every leaf must be a DISTINCT buffer: the engine donates the whole
+        # state, and donating one buffer twice is a runtime error
+        def f32():
+            return jnp.zeros((), jnp.float32)  # fresh fill => fresh buffer
+
+        zeros = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params_like
+        )
+        return CoreState(
+            round=jnp.array(0, jnp.int32),
+            L=f32(),
+            prev_global_grad=zeros,
+            prev2_global_grad=tree_zeros_like(zeros),
+            prev_grad_sqnorm=f32(),
+            params0_sqnorm=f32(),
+            prev_update_sqnorm=f32(),
+            prev2_update_sqnorm=f32(),
+            taus=jnp.array(np.asarray(taus, np.int32)),
+            ever=jnp.array(np.zeros(self.C, bool)),
+            stale_w=jnp.array(np.zeros(self.C, np.float32)),
+            vals={k: jnp.array(np.zeros(self.C, np.float32))
+                  for k in _STAT_KEYS},
+        )
+
+    # -- pure jax; called inside the engine's fused jit ---------------------
+    def step(self, state: CoreState, stats: RoundStats, members: jax.Array,
+             taus_used: jax.Array):
+        """(state, cohort stats, member ids, full-C taus used this round)
+        -> (new state, diag dict of small device arrays)."""
+        cfg = self.cfg
+        eps = jnp.float32(cfg.eps)
+        k = state.round
+
+        # ---- CohortStats scatter + staleness weighting (device twin) -----
+        stale_w = state.stale_w * jnp.float32(cfg.decay)
+        vals = {
+            key: state.vals[key].at[members].set(
+                getattr(stats, key).astype(jnp.float32)
+            )
+            for key in _STAT_KEYS
+        }
+        ever = state.ever.at[members].set(True)
+        stale_w = stale_w.at[members].set(1.0)
+        ever_f = ever.astype(jnp.float32)
+        n_obs = jnp.maximum(jnp.sum(ever_f), jnp.float32(1.0))
+        weighted = {}
+        for key in ("beta", "delta"):
+            mean_k = jnp.sum(vals[key] * ever_f) / n_obs
+            weighted[key] = (
+                stale_w * vals[key] + (jnp.float32(1.0) - stale_w) * mean_k
+            )
+
+        # ---- L estimation, one-round delay (Alg. 1 lines 11-16) ----------
+        L1 = jnp.sqrt(state.prev_grad_sqnorm) / jnp.maximum(
+            jnp.sqrt(state.params0_sqnorm), eps
+        )
+        num = tree_norm(tree_sub(state.prev_global_grad, state.prev2_global_grad))
+        den = jnp.sqrt(state.prev2_update_sqnorm)
+        L2 = num / jnp.maximum(den, eps)
+        L_obs = jnp.where(k == 1, L1, L2)
+        L = jnp.where(k >= 1, jnp.maximum(state.L, L_obs), state.L)
+
+        # ---- A_(k,i) = eta * beta^2 * delta (Theorem 1) -------------------
+        beta, delta = weighted["beta"], weighted["delta"]
+        A = jnp.float32(cfg.eta) * jnp.square(beta) * delta  # [C]
+
+        # ---- Eq. (15): tau prediction -------------------------------------
+        A_safe = jnp.maximum(A, eps)
+        A_min = jnp.min(A_safe)
+        bound = jnp.float32(2.0) * L / jnp.maximum(A_min, eps)
+        alpha = jnp.float32(cfg.alpha)
+        alpha_k = jnp.where(
+            bound < 1.0, jnp.minimum(alpha, jnp.float32(0.999) * bound), alpha
+        )
+        denom = A_safe - alpha_k * A_min
+        tau_f = jnp.where(
+            denom > eps,
+            jnp.floor(A_safe / jnp.maximum(denom, eps)),
+            jnp.float32(cfg.tau_max),
+        )
+        tau_f = jnp.where(tau_f <= 1.0, jnp.float32(cfg.tau_min), tau_f)
+        tau_pred = jnp.clip(tau_f, cfg.tau_min, cfg.tau_max).astype(jnp.int32)
+        use_pred = (
+            (k >= 1) & jnp.all(jnp.isfinite(A)) & jnp.any(A > eps)
+        )
+        tau_next = (
+            jnp.where(use_pred, tau_pred, taus_used) if self.adapt else taus_used
+        )
+
+        grad_sqnorm = (
+            stats.global_grad_sqnorm
+            if stats.global_grad_sqnorm is not None
+            else tree_sqnorm(stats.global_grad)
+        )
+        new_state = CoreState(
+            round=k + 1,
+            L=L,
+            prev_global_grad=stats.global_grad,
+            prev2_global_grad=state.prev_global_grad,
+            prev_grad_sqnorm=grad_sqnorm,
+            params0_sqnorm=jnp.where(
+                k == 0, stats.params_sqnorm, state.params0_sqnorm
+            ),
+            prev_update_sqnorm=stats.update_sqnorm,
+            prev2_update_sqnorm=state.prev_update_sqnorm,
+            taus=tau_next,
+            ever=ever,
+            stale_w=stale_w,
+            vals=vals,
+        )
+        diag = dict(
+            L=L,
+            premise=jnp.float32(cfg.eta) * stats.tau_k * L,
+            A=A,
+            alpha_k=alpha_k,
+            tau_next=tau_next,
+            beta=vals["beta"],
+            delta=vals["delta"],
+            grad_sqnorm=grad_sqnorm,
+        )
+        return new_state, diag

@@ -36,14 +36,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.controller import ControllerCore
 from repro.core.fedveca import ScaffoldState, make_local_update, make_round_step
 from repro.core.strategy import get_strategy, make_reduce
 from repro.core.tree import tree_axpy, tree_zeros_like
 from repro.data.device import DeviceShards
 
-# CPU backends that predate donation support just ignore the hint; the
-# warning would otherwise fire once per trace in every example run.
-warnings.filterwarnings("ignore", message="Some donated buffers were not usable")
+
+@contextlib.contextmanager
+def _quiet_donation():
+    """CPU backends that predate donation support just ignore the hint; the
+    warning would otherwise fire once per trace in every example run. Scoped
+    to the engine's own dispatches — module import must NOT mutate global
+    warning state for every importer."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        yield
 
 
 @dataclasses.dataclass
@@ -78,6 +88,8 @@ class RoundEngine:
         *,
         shards: Optional[DeviceShards] = None,
         num_clients: Optional[int] = None,
+        controller: Optional[ControllerCore] = None,  # fuse Alg. 1 into the
+        #   round: run_fused dispatches round + controller as ONE program
         context: Optional[Callable] = None,  # trace-time ambient (e.g. mesh
         #   logical axis rules); entered around the round body
     ):
@@ -85,6 +97,7 @@ class RoundEngine:
             raise ValueError(f"cohort_size must be >= 1, got {cfg.cohort_size}")
         self.cfg = cfg
         self.shards = shards
+        self.controller = controller
         self.num_clients = num_clients if num_clients is not None else (
             shards.num_clients if shards is not None else None
         )
@@ -101,7 +114,9 @@ class RoundEngine:
             stat_dtype=cfg.stat_dtype,
         )
 
-        def step(params, data, key, batches, tau, p, gprev_sqnorm, scaffold, cohort):
+        def round_body(params, data, key, batches, tau, p, gprev_sqnorm,
+                       scaffold, cohort):
+            """Shared cohort/data/scaffold plumbing around the fused round."""
             sub_scaffold = scaffold
             if cohort is not None:
                 tau = tau[cohort]
@@ -133,10 +148,51 @@ class RoundEngine:
                         scaffold.c_i, new_scaffold.c_i,
                     ),
                 )
+            return new_params, stats, new_scaffold, pw
+
+        def step(params, data, key, batches, tau, p, gprev_sqnorm, scaffold, cohort):
+            new_params, stats, new_scaffold, _ = round_body(
+                params, data, key, batches, tau, p, gprev_sqnorm, scaffold, cohort
+            )
             return new_params, stats, new_scaffold
 
         donate = (0, 7) if cfg.donate else ()  # params, scaffold
         self._step = jax.jit(step, donate_argnums=donate)
+
+        def fused(params, cstate, data, key, batches, p, scaffold, cohort):
+            """Round k + controller update as ONE dispatch (DESIGN.md §10).
+
+            taus and ||grad F(w_{k-1})||^2 come from the device-resident
+            controller state, so the host never syncs between rounds; only
+            the small ``diag`` arrays need a device->host copy, and the
+            caller decides when to block on them.
+            """
+            taus_full = jnp.clip(cstate.taus, 1, cfg.tau_max)
+            new_params, stats, new_scaffold, pw = round_body(
+                params, data, key, batches, taus_full, p,
+                cstate.prev_grad_sqnorm, scaffold, cohort,
+            )
+            C = taus_full.shape[0]
+            members = (
+                jnp.arange(C, dtype=jnp.int32) if cohort is None else cohort
+            )
+            new_cstate, diag = self.controller.step(
+                cstate, stats, members, taus_full
+            )
+            diag = dict(
+                diag,
+                train_loss=jnp.sum(pw * stats.loss0),
+                tau_k=stats.tau_k,
+                tau_round_sum=jnp.sum(
+                    taus_full if cohort is None else taus_full[cohort]
+                ),
+                update_sqnorm=stats.update_sqnorm,
+            )
+            return new_params, new_cstate, new_scaffold, diag
+
+        if controller is not None:
+            fused_donate = (0, 1, 6) if cfg.donate else ()  # params, cstate,
+            self._fused = jax.jit(fused, donate_argnums=fused_donate)  # scaffold
 
         def client_update(params, batches_c, tau_c, gprev_sqnorm):
             with self._context():
@@ -171,31 +227,66 @@ class RoundEngine:
         The params (and scaffold) buffers are DONATED when cfg.donate —
         callers must use the returned arrays, never the arguments.
         """
-        if batches is None:
-            if self.shards is None:
-                raise ValueError("no device shards: pass batches= or build the "
-                                 "engine with shards=DeviceShards.from_datasets(...)")
-            if key is None:
-                raise ValueError("device data path needs key=")
-            data = self.shards.tree()
-        else:
-            data = None
+        data = self._resolve_data(batches, key)
         tau = jnp.asarray(tau, jnp.int32)
         p = jnp.asarray(p, jnp.float32)
         cohort = None if cohort is None else jnp.asarray(cohort, jnp.int32)
-        if self._strategy.uses_scaffold and scaffold is None:
-            # materialize the full-C zero state up front: keeps c_i rows
-            # aligned to client ids under cohorts, and keeps the jit trace
-            # unique (None -> ScaffoldState would retrace round 1)
-            C = int(tau.shape[0])
-            scaffold = ScaffoldState(
-                c=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
-                c_i=jax.tree.map(
-                    lambda x: jnp.zeros((C,) + x.shape, jnp.float32), params
-                ),
-            )
-        return self._step(params, data, key, batches, tau, p,
-                          jnp.asarray(gprev_sqnorm, jnp.float32), scaffold, cohort)
+        scaffold = self._materialize_scaffold(scaffold, params, int(tau.shape[0]))
+        with _quiet_donation():
+            return self._step(params, data, key, batches, tau, p,
+                              jnp.asarray(gprev_sqnorm, jnp.float32), scaffold,
+                              cohort)
+
+    # -- fused round + controller (core/driver.TrainDriver) -----------------
+    def init_controller_state(self, params, taus):
+        """Device-resident Alg. 1 state for ``run_fused`` (round 0)."""
+        if self.controller is None:
+            raise ValueError("engine built without controller=ControllerCore")
+        return self.controller.init_state(params, taus)
+
+    def run_fused(self, params, cstate, p, *, key=None, batches=None,
+                  scaffold: Optional[ScaffoldState] = None, cohort=None):
+        """One round + controller update in a single dispatch.
+
+        Returns ``(new_params, new_cstate, new_scaffold, diag)`` where
+        ``diag`` holds only small arrays (scalars + [C] vectors) — the one
+        device->host surface of the fused step. params, cstate, and
+        scaffold buffers are DONATED when cfg.donate.
+        """
+        if self.controller is None:
+            raise ValueError("engine built without controller=ControllerCore")
+        data = self._resolve_data(batches, key)
+        p = jnp.asarray(p, jnp.float32)
+        cohort = None if cohort is None else jnp.asarray(cohort, jnp.int32)
+        scaffold = self._materialize_scaffold(scaffold, params, self.controller.C)
+        with _quiet_donation():
+            return self._fused(params, cstate, data, key, batches, p, scaffold,
+                               cohort)
+
+    def _resolve_data(self, batches, key):
+        """Shared data-path contract for run_round/run_fused: host batches
+        XOR (device shards + round key)."""
+        if batches is not None:
+            return None
+        if self.shards is None:
+            raise ValueError("no device shards: pass batches= or build the "
+                             "engine with shards=DeviceShards.from_datasets(...)")
+        if key is None:
+            raise ValueError("device data path needs key=")
+        return self.shards.tree()
+
+    def _materialize_scaffold(self, scaffold, params, C: int):
+        if not self._strategy.uses_scaffold or scaffold is not None:
+            return scaffold
+        # materialize the full-C zero state up front: keeps c_i rows
+        # aligned to client ids under cohorts, and keeps the jit trace
+        # unique (None -> ScaffoldState would retrace round 1)
+        return ScaffoldState(
+            c=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+            c_i=jax.tree.map(
+                lambda x: jnp.zeros((C,) + x.shape, jnp.float32), params
+            ),
+        )
 
     # -- message-passing halves (fed/prototype.py) --------------------------
     def client_update(self, params, batches_c, tau: int, gprev_sqnorm):
@@ -222,8 +313,13 @@ class RoundEngine:
         return self._weighted_average(stacked, jnp.asarray(w, jnp.float32))
 
     # -- cohort sub-sampling ------------------------------------------------
-    def sample_cohort(self, rng: np.random.RandomState) -> Optional[np.ndarray]:
-        """Draw this round's participating clients, or None for all of them."""
+    def sample_cohort(self, rng: np.random.Generator) -> Optional[np.ndarray]:
+        """Draw this round's participating clients, or None for all of them.
+
+        ``rng`` is a ``np.random.Generator`` (``np.random.default_rng``);
+        the legacy ``RandomState`` also works (same ``choice`` API) but new
+        call sites should pass a Generator.
+        """
         m, C = self.cfg.cohort_size, self.num_clients
         if m is None or C is None or m >= C:
             return None

@@ -53,6 +53,9 @@ class RoundStats(NamedTuple):
     global_grad: Any  # pytree: grad F(w_k) = sum_i p_i grad F_i(w_k)  (Eq. 8)
     update_sqnorm: jax.Array  # ||w_{k+1} - w_k||^2
     params_sqnorm: jax.Array  # ||w_k||^2 (round-start; L estimate at k=1)
+    global_grad_sqnorm: Any = None  # ||grad F(w_k)||^2 — emitted by the round
+    #   step so the controller never re-reduces the gradient tree (the
+    #   next round's Alg. 2 line 14/17 broadcast reads this scalar)
 
 
 class ScaffoldState(NamedTuple):
@@ -216,6 +219,7 @@ def make_round_step(
             global_grad=global_grad,
             update_sqnorm=tree_sqnorm(delta_w),
             params_sqnorm=tree_sqnorm(params),
+            global_grad_sqnorm=tree_sqnorm(global_grad),
         )
         return new_params, stats, new_scaffold
 

@@ -113,13 +113,18 @@ class DeviceShards:
         return jax.lax.optimization_barrier(out)
 
 
-def host_stacked_batches(datasets: List[Dataset], rng: np.random.RandomState,
-                         tau_max: int, batch: int) -> dict:
+def host_stacked_batches(datasets: List[Dataset], rng, tau_max: int,
+                         batch: int) -> dict:
     """Legacy host path: leaves [C, tau_max, batch, ...], a fresh minibatch
-    per local step, built with numpy and uploaded whole every round."""
+    per local step, built with numpy and uploaded whole every round.
+
+    ``rng`` is an ``np.random.Generator`` (the driver loop's RNG); the
+    legacy ``RandomState`` is still accepted for the seed-reproducibility
+    benchmarks."""
+    draw = rng.integers if isinstance(rng, np.random.Generator) else rng.randint
     xs, ys = [], []
     for d in datasets:
-        idx = rng.randint(0, len(d), size=(tau_max, batch))
+        idx = draw(0, len(d), size=(tau_max, batch))
         xs.append(d.x[idx])
         ys.append(d.y[idx])
     x = np.stack(xs)

@@ -6,6 +6,12 @@
   even/odd binarization for the paper's SVM).
 * Synthetic LM token streams: per-source unigram "topic" distributions;
   Non-IID federated splits give each client a distinct topic mixture.
+
+RNG note: this module (and data/partition.py) deliberately stays on
+``np.random.RandomState`` — the legacy bit-stream keeps every seeded
+dataset/partition reproducible against recorded experiment artifacts.
+New *runtime* randomness (cohort sampling, the driver loop) uses
+``np.random.Generator`` (see core/engine.sample_cohort).
 """
 from __future__ import annotations
 

@@ -44,6 +44,8 @@ class FedVecaClient:
         self.data = data
         self.b = batch_size
         self.eta = eta
+        # RandomState on purpose: client-local data draws are a recorded
+        # seed-reproducibility path (see data/synthetic.py RNG note)
         self.rng = np.random.RandomState(seed + client_id)
         self.engine = RoundEngine(
             model.loss, EngineConfig(mode="fedveca", eta=eta, donate=False),
@@ -127,6 +129,7 @@ class FedVecaServer:
                 tree_sqnorm(jax.tree.map(lambda a, b: a - b, self.params, params_start))
             ),
             params_sqnorm=jnp.float32(tree_sqnorm(params_start)),
+            global_grad_sqnorm=jnp.float32(tree_sqnorm(global_grad)),
         )
         self.ctrl_state, self.taus, diag = self.controller.update(
             self.ctrl_state, stats

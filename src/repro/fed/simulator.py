@@ -1,4 +1,5 @@
-"""Federated simulator: K rounds of the RoundEngine + host controller.
+"""Federated simulator: K rounds of the fused round+controller step via
+``core/driver.TrainDriver``.
 
 Implements the paper's full experimental protocol (§IV-A):
   * FedVeca: adaptive tau via the controller (Alg. 1);
@@ -8,27 +9,34 @@ Implements the paper's full experimental protocol (§IV-A):
   * per-round test loss/accuracy, premise value eta*tau_k*L, and the
     instantaneous (tau_i, beta_i, delta_i, A_i, L_k) traces of Fig. 6.
 
-The round itself is owned by ``core/engine.RoundEngine``: client shards
-live on device and minibatches are sampled inside the jitted round
-(``data_path="device"``, the default; ``"host"`` keeps the seed's
-numpy-sampled, re-uploaded batches for comparison), the server reduce can
-run through the Pallas vecavg kernel (``aggregator=``), and partial
-participation is a config knob (``cohort_size``). With a cohort, the
-controller sees scattered statistics: non-participants keep their last
-observed beta/delta and their tau is still re-predicted every round.
+The round AND the controller are owned by ``core/engine.RoundEngine``:
+the Alg. 1 state (including the two retained global-gradient pytrees)
+lives on device in a jitted ``ControllerCore``, fused with the round into
+one dispatch, so a round returns only scalar diagnostics to host
+(DESIGN.md §10). The ``TrainDriver`` overlaps round k+1's cohort sampling
+and dispatch with round k's readback/eval/logging (``overlap``;
+``overlap=0`` is the sync debugging mode — bit-identical results either
+way). Client shards live on device and minibatches are sampled inside the
+jitted round (``data_path="device"``, the default; ``"host"`` keeps the
+seed's numpy-sampled, re-uploaded batches for comparison), the server
+reduce can run through the Pallas vecavg kernel (``aggregator=``), and
+partial participation is a config knob (``cohort_size``). With a cohort,
+the controller sees staleness-weighted statistics: non-participants decay
+from their last observed beta/delta toward the cohort mean
+(``stats_decay``; core/controller.CohortStats documents the model).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.controller import CohortStats, ControllerConfig, FedVecaController
+from repro.core.controller import ControllerConfig, ControllerCore, FedVecaController
+from repro.core.driver import TrainDriver, make_dataset_evaluator
 from repro.core.engine import EngineConfig, RoundEngine
-from repro.core.tree import tree_sqnorm
 from repro.data.device import DeviceShards, format_batch, host_stacked_batches
 from repro.data.synthetic import Dataset
 from repro.metrics.logger import RunLogger
@@ -53,6 +61,9 @@ class FedSimConfig:
     aggregator: str = "auto"  # 'pallas' | 'fallback' | 'auto'
     data_path: str = "device"  # 'device' (resident shards) | 'host' (legacy)
     donate: bool = True
+    # -- driver knobs -------------------------------------------------------
+    overlap: int = 1  # in-flight rounds before host sync; 0 = sync mode
+    stats_decay: float = 0.9  # staleness retention for unobserved clients
 
 
 class FederatedSimulator:
@@ -76,6 +87,10 @@ class FederatedSimulator:
             if cfg.data_path == "device"
             else None
         )
+        ctrl_cfg = ControllerConfig(
+            eta=cfg.eta, alpha=cfg.alpha, tau_max=cfg.tau_max,
+            tau_init=cfg.tau_init, decay=cfg.stats_decay,
+        )
         self.engine = RoundEngine(
             model.loss,
             EngineConfig(
@@ -85,15 +100,27 @@ class FederatedSimulator:
             ),
             shards=shards,
             num_clients=self.C,
+            controller=ControllerCore(
+                ctrl_cfg, self.C, adapt=(cfg.mode == "fedveca")
+            ),
         )
-        ctrl_cfg = ControllerConfig(
-            eta=cfg.eta, alpha=cfg.alpha, tau_max=cfg.tau_max, tau_init=cfg.tau_init
-        )
+        # the numpy twin stays constructible for oracle tests / external use
         self.controller = FedVecaController(ctrl_cfg, self.C)
         self._eval_fn = jax.jit(model.loss)
+        self.driver = TrainDriver(
+            self.engine, self.p,
+            overlap=cfg.overlap, seed=cfg.seed, mode=cfg.mode,
+            eval_fn=(
+                make_dataset_evaluator(model.loss, test_data)
+                if test_data is not None
+                else None
+            ),
+            eval_every=cfg.eval_every,
+            batches_fn=self._host_batches if cfg.data_path == "host" else None,
+        )
 
     # -- data ---------------------------------------------------------------
-    def _host_batches(self, rng: np.random.RandomState):
+    def _host_batches(self, rng: np.random.Generator):
         """Legacy path: leaves [C, tau_max, b, ...] built host-side."""
         return host_stacked_batches(
             self.client_data, rng, self.cfg.tau_max, self.cfg.batch_size
@@ -118,75 +145,25 @@ class FederatedSimulator:
             out["test_acc"] = sum(accs) / n
         return out
 
-    # -- main loop ------------------------------------------------------------
+    # -- main loop ----------------------------------------------------------
+    def init_taus(self) -> np.ndarray:
+        cfg = self.cfg
+        if cfg.mode == "fedveca":
+            return np.full(self.C, cfg.tau_init, np.int32)
+        taus = (
+            np.asarray(cfg.fixed_tau, np.int32)
+            if cfg.fixed_tau is not None
+            else np.full(self.C, cfg.tau_init, np.int32)
+        )
+        return np.clip(taus, 1, cfg.tau_max)
+
     def run(self, params=None, rounds: Optional[int] = None) -> RunLogger:
         cfg = self.cfg
         rounds = rounds or cfg.rounds
-        rng = np.random.RandomState(cfg.seed)
-        key = jax.random.PRNGKey(cfg.seed)
         if params is None:
             params = self.model.init(jax.random.PRNGKey(cfg.seed))
-
         log = RunLogger(cfg.log_dir, name=f"{cfg.mode}")
-        if cfg.mode == "fedveca":
-            taus = self.controller.init_taus()
-        else:
-            taus = (
-                np.asarray(cfg.fixed_tau, np.int32)
-                if cfg.fixed_tau is not None
-                else np.full(self.C, cfg.tau_init, np.int32)
-            )
-            taus = np.clip(taus, 1, cfg.tau_max)
-        state = self.controller.init_state()
-        scaffold = None
-        gprev_sqnorm = jnp.zeros((), jnp.float32)
-        tau_all = 0
-        cohort_stats = CohortStats(self.C)
-
-        for k in range(rounds):
-            cohort = self.engine.sample_cohort(rng)
-            key, sub = jax.random.split(key)
-            batches = self._host_batches(rng) if cfg.data_path == "host" else None
-            params, stats, scaffold = self.engine.run_round(
-                params, taus, self.p, gprev_sqnorm,
-                key=sub, batches=batches, scaffold=scaffold, cohort=cohort,
-            )
-
-            # scatter cohort stats into the full per-client view
-            members = cohort if cohort is not None else np.arange(self.C)
-            p_round = self.p[members] / self.p[members].sum()
-            full_stats = cohort_stats.scatter(stats, members, taus)
-            tau_all += int(np.sum(np.asarray(taus)[members]))
-            diag: Dict[str, Any] = {}
-            if cfg.mode == "fedveca":
-                state, taus, diag = self.controller.update(state, full_stats)
-            else:
-                # still track L for premise logging parity
-                state, _, diag = self.controller.update(state, full_stats)
-            gprev_sqnorm = tree_sqnorm(stats.global_grad)
-
-            row = dict(
-                round=k,
-                mode=cfg.mode,
-                train_loss=float(np.sum(p_round * np.asarray(stats.loss0))),
-                tau=np.asarray(taus).copy(),
-                tau_k=float(stats.tau_k),
-                tau_all=tau_all,
-                beta=cohort_stats.vals["beta"].copy(),
-                delta=cohort_stats.vals["delta"].copy(),
-                cohort=None if cohort is None else np.asarray(cohort).copy(),
-                A=diag.get("A"),
-                L=diag.get("L"),
-                premise=diag.get("premise"),
-                alpha_k=diag.get("alpha_k"),
-            )
-            if (k % cfg.eval_every) == 0 or k == rounds - 1:
-                row.update(self.evaluate(params))
-            log.log(**row)
-        log.params = params  # type: ignore[attr-defined]
-        log.tau_all = tau_all  # type: ignore[attr-defined]
-        log.close()
-        return log
+        return self.driver.run(params, rounds, self.init_taus(), logger=log)
 
 
 def fair_fixed_tau(tau_all: int, rounds: int, batch: int, sizes: np.ndarray) -> np.ndarray:
@@ -198,7 +175,11 @@ def fair_fixed_tau(tau_all: int, rounds: int, batch: int, sizes: np.ndarray) -> 
 
 def centralized_sgd(model, data: Dataset, iterations: int, batch: int, eta: float,
                     test_data: Optional[Dataset] = None, seed: int = 0):
-    """The paper's centralized baseline: tau_all SGD iterations on pooled data."""
+    """The paper's centralized baseline: tau_all SGD iterations on pooled data.
+
+    Keeps ``RandomState`` on purpose: seed-reproducibility path, documented
+    in data/synthetic.py (the driver loop itself uses np.random.Generator).
+    """
     rng = np.random.RandomState(seed)
     params = model.init(jax.random.PRNGKey(seed))
 

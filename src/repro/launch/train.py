@@ -14,6 +14,11 @@ step budget. Data: synthetic Non-IID topic streams (per-client topics),
 held device-resident and sampled inside the jitted round (RoundEngine;
 --host-data re-enables the legacy per-round upload for comparison).
 --cohort m sub-samples m participating clients per round.
+
+Rounds run through ``core/driver.TrainDriver``: the controller is fused
+into the jitted round (device-resident Alg. 1 state) and round k+1 is
+dispatched while round k's diagnostics are still in flight (--overlap;
+0 = sync debugging mode).
 """
 from __future__ import annotations
 
@@ -21,14 +26,13 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
-from repro.core.controller import CohortStats, ControllerConfig, FedVecaController
+from repro.core.controller import ControllerConfig, ControllerCore
+from repro.core.driver import TrainDriver
 from repro.core.engine import EngineConfig, RoundEngine
-from repro.core.tree import tree_sqnorm
 from repro.data.device import DeviceShards, host_stacked_batches
 from repro.data.synthetic import make_lm_tokens
 from repro.launch.mesh import make_host_mesh, make_production_mesh, num_clients
@@ -53,6 +57,8 @@ def main():
                     choices=("auto", "pallas", "fallback"))
     ap.add_argument("--host-data", action="store_true",
                     help="legacy path: build batches on host, upload per round")
+    ap.add_argument("--overlap", type=int, default=1,
+                    help="rounds in flight before host sync (0 = sync mode)")
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 pod mesh (requires 256 devices)")
     ap.add_argument("--data-axis", type=int, default=2)
@@ -73,7 +79,7 @@ def main():
     print(f"arch={cfg.name} mesh={dict(mesh.shape)} clients={C} "
           f"global_batch={shape.global_batch} seq={shape.seq_len} "
           f"data={'host' if args.host_data else 'device'} "
-          f"cohort={args.cohort or C}")
+          f"cohort={args.cohort or C} overlap={args.overlap}")
 
     datasets = [
         make_lm_tokens(64, args.seq, cfg.vocab_size, topic=i, seed=0) for i in range(C)
@@ -89,48 +95,39 @@ def main():
         ),
         shards=None if args.host_data else DeviceShards.from_datasets(datasets),
         num_clients=C,
+        controller=ControllerCore(
+            ControllerConfig(eta=args.eta, alpha=args.alpha, tau_max=args.tau_max),
+            C, adapt=(args.mode == "fedveca"),
+        ),
         context=lambda: logical_axis_rules(mesh, {"batch": None}),
-    )
-    ctl = FedVecaController(
-        ControllerConfig(eta=args.eta, alpha=args.alpha, tau_max=args.tau_max),
-        C,
     )
 
     params = model.init(jax.random.PRNGKey(0))
-    taus = ctl.init_taus()
-    state = ctl.init_state()
-    gprev = jnp.float32(0.0)
-    rng = np.random.RandomState(0)
-    key = jax.random.PRNGKey(0)
-    p = jnp.full((C,), 1.0 / C, jnp.float32)
-    cohort_stats = CohortStats(C)
+    taus = np.full(C, 2, np.int32)
+    p = np.full((C,), 1.0 / C, np.float32)
+    t_last = [time.time()]
 
+    def on_row(row):
+        now = time.time()
+        print(f"round {row['round']}: loss={row['train_loss']:.4f} "
+              f"tau_k={row['tau_k']:.2f} tau_next={np.asarray(row['tau']).tolist()} "
+              f"({now - t_last[0]:.1f}s)")
+        t_last[0] = now
+
+    driver = TrainDriver(
+        engine, p, overlap=args.overlap, seed=0, mode=args.mode,
+        batches_fn=(
+            (lambda rng: host_stacked_batches(datasets, rng, args.tau_max,
+                                              args.batch_per_client))
+            if args.host_data
+            else None
+        ),
+        on_row=on_row,
+    )
     with mesh:
-        for k in range(args.rounds):
-            cohort = engine.sample_cohort(rng)
-            key, sub = jax.random.split(key)
-            batches = (
-                host_stacked_batches(datasets, rng, args.tau_max,
-                                     args.batch_per_client)
-                if args.host_data
-                else None
-            )
-            t0 = time.time()
-            params, stats, _ = engine.run_round(
-                params, np.minimum(taus, args.tau_max), p, gprev,
-                key=sub, batches=batches, cohort=cohort,
-            )
-            dt = time.time() - t0
-            if args.mode == "fedveca":
-                members = cohort if cohort is not None else np.arange(C)
-                full_stats = cohort_stats.scatter(stats, members,
-                                                  np.minimum(taus, args.tau_max))
-                state, taus, diag = ctl.update(state, full_stats)
-            gprev = tree_sqnorm(stats.global_grad)
-            print(f"round {k}: loss={float(jnp.mean(stats.loss0)):.4f} "
-                  f"tau_k={float(stats.tau_k):.2f} tau_next={list(taus)} "
-                  f"({dt:.1f}s)")
-    print("done.")
+        driver.run(params, args.rounds, taus)
+    print(f"done. host-blocked {driver.host_blocked_s:.2f}s over "
+          f"{args.rounds} rounds")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,263 @@
+"""Control plane + driver (DESIGN.md §10): staleness-weighted CohortStats
+under partial participation, the jitted ControllerCore against the numpy
+oracle controller trace-for-trace, and TrainDriver overlap semantics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.controller import (
+    CohortStats,
+    ControllerConfig,
+    ControllerCore,
+    FedVecaController,
+)
+from repro.core.driver import TrainDriver, make_dataset_evaluator
+from repro.core.engine import EngineConfig, RoundEngine
+from repro.core.fedveca import RoundStats
+from repro.data.device import DeviceShards
+from repro.data.partition import partition_case3
+from repro.data.synthetic import Dataset, binarize_even_odd, make_classification
+from repro.models.model import build_model_by_name
+
+C, TAU_MAX = 5, 8
+
+
+@pytest.fixture(scope="module")
+def svm_setup():
+    orig = make_classification(1000, (784,), 10, seed=0)
+    train = binarize_even_odd(orig)
+    test = binarize_even_odd(make_classification(300, (784,), 10, seed=1))
+    parts = partition_case3(orig.y, C, seed=0)
+    clients = [Dataset(train.x[s], train.y[s]) for s in parts]
+    model = build_model_by_name("svm-mnist")
+    p = np.array([len(c) for c in clients], np.float64)
+    p = (p / p.sum()).astype(np.float32)
+    return model, clients, test, p
+
+
+def _engine(model, clients, cohort_size=None, controller=None, donate=True):
+    return RoundEngine(
+        model.loss,
+        EngineConfig(mode="fedveca", eta=0.05, tau_max=TAU_MAX, batch_size=16,
+                     cohort_size=cohort_size, donate=donate),
+        shards=DeviceShards.from_datasets(clients),
+        num_clients=len(clients),
+        controller=controller,
+    )
+
+
+# ---------------------------------------------------------------------------
+# CohortStats staleness model
+# ---------------------------------------------------------------------------
+
+
+def _stats(beta, delta):
+    beta = jnp.asarray(beta, jnp.float32)
+    n = beta.shape[0]
+    return RoundStats(
+        loss0=jnp.zeros((n,)), beta=beta,
+        delta=jnp.asarray(delta, jnp.float32), g0_sqnorm=jnp.ones((n,)),
+        tau=jnp.full((n,), 2, jnp.int32), tau_k=jnp.float32(2.0),
+        global_grad={}, update_sqnorm=jnp.float32(0.1),
+        params_sqnorm=jnp.float32(1.0), global_grad_sqnorm=jnp.float32(1.0),
+    )
+
+
+def test_never_observed_get_mean_not_zero():
+    cs = CohortStats(4, decay=0.5)
+    full = cs.scatter(_stats([2.0, 4.0], [1.0, 3.0]),
+                      np.array([1, 3]), np.full(4, 2))
+    np.testing.assert_allclose(np.asarray(full.beta), [3.0, 2.0, 3.0, 4.0])
+    np.testing.assert_allclose(np.asarray(full.delta), [2.0, 1.0, 2.0, 3.0])
+
+
+def test_staleness_decays_toward_cohort_mean():
+    """A stale client's fill slides from last-seen toward the observed
+    mean with age, converging to the uniform mean fill as age -> inf."""
+    decay = 0.5
+    cs = CohortStats(3, decay=decay)
+    # round 0: everyone observed
+    cs.scatter(_stats([1.0, 2.0, 9.0], [1.0, 1.0, 1.0]),
+               np.arange(3), np.full(3, 2))
+    # client 2 never observed again; clients 0/1 re-observed unchanged
+    prev_gap = None
+    fills = []
+    for _ in range(12):
+        full = cs.scatter(_stats([1.0, 2.0], [1.0, 1.0]),
+                          np.array([0, 1]), np.full(3, 2))
+        fill = float(np.asarray(full.beta)[2])
+        mean = (1.0 + 2.0 + 9.0) / 3.0  # stored last-seen values
+        gap = abs(fill - mean)
+        if prev_gap is not None:
+            assert gap < prev_gap + 1e-7  # monotone approach to the mean
+        prev_gap = gap
+        fills.append(fill)
+    assert abs(fills[0] - 9.0) < abs(9.0 - mean)  # moved off last-seen
+    assert prev_gap < 0.01  # converged to the uniform mean fill
+    # fresh clients always pass through exactly
+    np.testing.assert_allclose(np.asarray(full.beta)[:2], [1.0, 2.0])
+
+
+def test_full_participation_is_exact_passthrough():
+    """With everyone observed every round, decay<1 must not perturb the
+    statistics at all (age stays 0 => weight stays exactly 1)."""
+    cs = CohortStats(3, decay=0.7)
+    for beta in ([1.5, 2.5, 3.5], [0.1, 9.0, 4.2]):
+        full = cs.scatter(_stats(beta, [1.0, 2.0, 3.0]),
+                          np.arange(3), np.full(3, 2))
+        np.testing.assert_array_equal(np.asarray(full.beta),
+                                      np.asarray(beta, np.float32))
+
+
+def test_decay_validation():
+    with pytest.raises(ValueError, match="decay"):
+        CohortStats(3, decay=0.0)
+    with pytest.raises(ValueError, match="decay"):
+        ControllerCore(ControllerConfig(eta=0.05, decay=-0.9), 3)
+
+
+# ---------------------------------------------------------------------------
+# jitted ControllerCore vs the numpy oracle, trace-for-trace
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cohort_size", [None, 3])
+def test_core_matches_numpy_oracle_trace(svm_setup, cohort_size):
+    """10 recorded rounds (fedveca, device data path): the fused device
+    controller must emit EXACTLY the oracle's tau sequence, with and
+    without a cohort, and closely matching L/premise scalars."""
+    model, clients, _, p = svm_setup
+    ctl_cfg = ControllerConfig(eta=0.05, tau_max=TAU_MAX)
+    rounds = 10
+
+    # --- legacy loop: run_round + host CohortStats + numpy controller ----
+    eng = _engine(model, clients, cohort_size, donate=False)
+    ctl = FedVecaController(ctl_cfg, C)
+    cs = CohortStats(C, decay=ctl_cfg.decay)
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(0)
+    params = model.init(jax.random.PRNGKey(0))
+    taus, state, gprev = ctl.init_taus(), ctl.init_state(), 0.0
+    oracle = []
+    for _ in range(rounds):
+        cohort = eng.sample_cohort(rng)
+        key, sub = jax.random.split(key)
+        params, stats, _ = eng.run_round(params, taus, p, gprev,
+                                         key=sub, cohort=cohort)
+        members = cohort if cohort is not None else np.arange(C)
+        state, taus, diag = ctl.update(state, cs.scatter(stats, members, taus))
+        gprev = float(stats.global_grad_sqnorm)
+        oracle.append((np.asarray(taus).copy(), diag["L"], diag["premise"]))
+
+    # --- fused device path through the same engine config ----------------
+    eng2 = _engine(model, clients, cohort_size,
+                   controller=ControllerCore(ctl_cfg, C))
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(0)
+    params = model.init(jax.random.PRNGKey(0))
+    cstate = eng2.init_controller_state(params, np.full(C, 2, np.int32))
+    for k in range(rounds):
+        cohort = eng2.sample_cohort(rng)
+        key, sub = jax.random.split(key)
+        params, cstate, _, diag = eng2.run_fused(params, cstate, p,
+                                                 key=sub, cohort=cohort)
+        tau_np, L_np, prem_np = oracle[k]
+        np.testing.assert_array_equal(np.asarray(diag["tau_next"]), tau_np)
+        np.testing.assert_allclose(float(diag["L"]), L_np, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(float(diag["premise"]), prem_np,
+                                   rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# TrainDriver
+# ---------------------------------------------------------------------------
+
+
+def _driver(model, clients, p, overlap, cohort_size=None, adapt=True,
+            eval_fn=None):
+    ctl_cfg = ControllerConfig(eta=0.05, tau_max=TAU_MAX)
+    eng = _engine(model, clients, cohort_size,
+                  controller=ControllerCore(ctl_cfg, C, adapt=adapt))
+    return TrainDriver(eng, p, overlap=overlap, seed=0, eval_fn=eval_fn)
+
+
+@pytest.mark.parametrize("overlap", [1, 3])
+def test_overlap_bit_identical_to_sync(svm_setup, overlap):
+    """Any overlap must produce bit-identical params and tau traces to the
+    sync (overlap=0) loop: same host RNG draws, same device programs."""
+    model, clients, _, p = svm_setup
+    outs = {}
+    for ov in (0, overlap):
+        drv = _driver(model, clients, p, ov, cohort_size=3)
+        log = drv.run(model.init(jax.random.PRNGKey(0)), 6,
+                      np.full(C, 2, np.int32))
+        outs[ov] = (jax.tree.map(np.asarray, log.params),
+                    [r["tau"] for r in log.rows], log.tau_all)
+    for k in outs[0][0]:
+        np.testing.assert_array_equal(outs[0][0][k], outs[overlap][0][k])
+    assert outs[0][1] == outs[overlap][1]
+    assert outs[0][2] == outs[overlap][2]
+
+
+def test_driver_fixed_tau_mode_keeps_taus(svm_setup):
+    """adapt=False (fedavg/fednova baselines): taus never change but the
+    premise/L diagnostics still flow."""
+    model, clients, _, p = svm_setup
+    drv = _driver(model, clients, p, overlap=1, adapt=False)
+    fixed = np.array([3, 2, 4, 2, 3], np.int32)
+    log = drv.run(model.init(jax.random.PRNGKey(0)), 5, fixed)
+    for r in log.rows:
+        np.testing.assert_array_equal(np.asarray(r["tau"]), fixed)
+    assert np.isfinite(log.rows[-1]["L"])
+    assert log.tau_all == 5 * int(fixed.sum())
+
+
+def test_driver_requires_fused_engine(svm_setup):
+    model, clients, _, p = svm_setup
+    eng = _engine(model, clients)  # no controller
+    with pytest.raises(ValueError, match="controller"):
+        TrainDriver(eng, p)
+    with pytest.raises(ValueError, match="overlap"):
+        TrainDriver(_engine(model, clients,
+                            controller=ControllerCore(
+                                ControllerConfig(eta=0.05), C)),
+                    p, overlap=-1)
+
+
+def test_async_evaluator_matches_blocking_evaluate(svm_setup):
+    """make_dataset_evaluator (chunked, async) == the simulator's blocking
+    evaluate, including the remainder batch."""
+    from repro.fed.simulator import FederatedSimulator, FedSimConfig
+
+    model, clients, test, _ = svm_setup
+    assert len(test) % 128 != 0  # exercise the remainder path
+    sim = FederatedSimulator(model, clients,
+                             FedSimConfig(rounds=1, tau_max=4), test)
+    params = model.init(jax.random.PRNGKey(7))
+    ev = make_dataset_evaluator(model.loss, test, max_batch=128)(params)
+    blocking = sim.evaluate(params, max_batch=128)
+    np.testing.assert_allclose(float(ev["test_loss"]), blocking["test_loss"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(ev["test_acc"]), blocking["test_acc"],
+                               rtol=1e-5)
+
+
+def test_simulator_partial_participation_end_to_end(svm_setup):
+    """Driver-backed simulator with a cohort: finite losses, cohort ids
+    logged, taus adapting within bounds."""
+    from repro.fed.simulator import FederatedSimulator, FedSimConfig
+
+    model, clients, test, _ = svm_setup
+    cfg = FedSimConfig(mode="fedveca", rounds=8, tau_max=TAU_MAX,
+                       batch_size=16, eta=0.05, cohort_size=2,
+                       stats_decay=0.8)
+    log = FederatedSimulator(model, clients, cfg, test).run()
+    assert len(log.rows) == 8
+    for r in log.rows:
+        assert len(r["cohort"]) == 2
+        assert np.isfinite(r["train_loss"])
+        tau = np.asarray(r["tau"])
+        assert tau.min() >= 2 and tau.max() <= TAU_MAX
+    assert np.isfinite(log.rows[-1]["test_loss"])

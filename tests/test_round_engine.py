@@ -174,11 +174,13 @@ def test_device_and_host_paths_agree_statistically(svm):
 
 def test_cohort_stats_fill_never_observed_with_mean():
     """Unobserved clients must NOT read as beta=delta=0 (A=0 would steal
-    tau_max for them and collapse participants to tau_min in Eq. 15)."""
+    tau_max for them and collapse participants to tau_min in Eq. 15).
+    decay=1.0 pins the freeze-at-last-seen semantics; the staleness
+    weighting under decay<1 is covered in test_controller_driver.py."""
     from repro.core.controller import CohortStats
     from repro.core.fedveca import RoundStats
 
-    cs = CohortStats(4)
+    cs = CohortStats(4, decay=1.0)
     stats = RoundStats(
         loss0=jnp.array([1.0, 2.0]), beta=jnp.array([2.0, 4.0]),
         delta=jnp.array([1.0, 3.0]), g0_sqnorm=jnp.array([1.0, 1.0]),
