@@ -1,13 +1,18 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test collect ci smoke bench-round-engine bench-controller-driver
+.PHONY: test collect test-sharded ci smoke bench-round-engine \
+	bench-controller-driver bench-sharded
 
 test:
 	python -m pytest -x -q
 
 collect:
 	python -m pytest --collect-only -q
+
+test-sharded:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		python -m pytest -x -q tests/test_sharded_round.py
 
 smoke:
 	python examples/quickstart.py --rounds 3
@@ -20,3 +25,6 @@ bench-round-engine:
 
 bench-controller-driver:
 	python benchmarks/controller_driver.py --smoke
+
+bench-sharded:
+	python benchmarks/sharded_round.py

@@ -3,14 +3,25 @@ the per-(arch x shape x mesh) roofline table — compute/memory/collective
 terms, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs useful-compute ratio.
 
 Reads experiments/dryrun/*.json (written by repro.launch.dryrun); emits
-CSV + a markdown table for EXPERIMENTS.md §Roofline.
+CSV + a markdown table for EXPERIMENTS.md §Roofline. Also WRITES one
+record itself: the analytic roofline row for the fused [C, D_total]
+vecavg server reduce (``vecavg_record`` — the kernel's single-HBM-pass
+arithmetic intensity is ~1 flop/byte, i.e. memory-bound by construction;
+the compile-path numerics half of the ROADMAP 'vecavg on-TPU' item lives
+in tests/test_kernels.py).
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
+import time
 from typing import Dict, List
+
+# v5e per-chip peaks, mirrored from launch/dryrun.py — that module
+# force-sets XLA_FLAGS at import time and must NOT be imported here.
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # B/s
 
 HEADERS = [
     "arch", "shape", "mesh", "status", "step", "compute_s", "memory_s",
@@ -77,7 +88,61 @@ def to_markdown(rows: List[Dict]) -> str:
     return "\n".join(out)
 
 
+def vecavg_record(C: int = 32, d_total: int = 1 << 20,
+                  art_dir: str = "experiments/dryrun") -> Dict:
+    """Write the dryrun-schema roofline record for the fused [C, D_total]
+    vecavg reduce (DESIGN.md §7): one HBM pass over U[C, D] producing the
+    weighted sum AND the per-client squared norms.
+
+    Analytic terms use the v5e peaks; ``step`` is the measured wall time
+    of the XLA fallback reduce on THIS host (same math, same one-pass
+    bytes) so the row carries a real number even off-TPU.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.strategy import fallback_reduce
+
+    r = np.random.default_rng(0)
+    u = jnp.asarray(r.standard_normal((C, d_total), dtype=np.float32))
+    p = jnp.full((C,), 1.0 / C, jnp.float32)
+    reduce = jax.jit(lambda u_, p_: fallback_reduce(u_, p_, 1.0))
+    t0 = time.perf_counter()
+    jax.block_until_ready(reduce(u, p))
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    n_it = 5
+    for _ in range(n_it):
+        out = reduce(u, p)
+    jax.block_until_ready(out)
+    step = (time.perf_counter() - t0) / n_it
+
+    flops = 4.0 * C * d_total  # 2CD weighted sum + 2CD squares/norms
+    bytes_acc = 4.0 * (C * d_total + C + d_total + C)  # read U,p; write dw,sqn
+    rec = dict(
+        arch="vecavg-reduce", shape=f"C{C}xD{d_total}", mesh="1chip",
+        status="OK", step=step, compile_s=round(compile_s, 4),
+        hlo_flops_per_device=flops, hlo_bytes_per_device=bytes_acc,
+        collective_bytes_per_device=dict(total=0.0),
+        memory=dict(temp_bytes=int(bytes_acc), argument_bytes=0),
+        roofline=dict(compute_s=flops / PEAK_FLOPS,
+                      memory_s=bytes_acc / HBM_BW, collective_s=0.0),
+        bottleneck="memory_s",  # AI ~ 1 flop/byte: fused or not, HBM-bound
+        useful_flops_ratio=1.0,  # every flop is the Eq. 8 reduce itself
+    )
+    os.makedirs(art_dir, exist_ok=True)
+    with open(os.path.join(art_dir, "vecavg_reduce.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
 def run(scale=None, out_rows: list = None, csv_dir=None, art_dir="experiments/dryrun"):
+    # measure once, then aggregate like any other dryrun artifact (the
+    # 128 MB timing pass should not tax every harness invocation);
+    # delete the JSON (or call vecavg_record directly) to re-measure
+    if not os.path.exists(os.path.join(art_dir, "vecavg_reduce.json")):
+        vecavg_record(art_dir=art_dir)
     rows = load(art_dir)
     if csv_dir:
         to_csv(rows, os.path.join(csv_dir, "roofline.csv"))

@@ -26,6 +26,7 @@ from benchmarks import (  # noqa: E402
     kernels_micro,
     roofline,
     round_engine,
+    sharded_round,
 )
 from benchmarks.common import FULL, QUICK, emit  # noqa: E402
 
@@ -41,6 +42,7 @@ BENCHES = {
     "roofline": roofline.run,
     "round_engine": round_engine.run,
     "controller_driver": controller_driver.run,
+    "sharded_round": sharded_round.run,
 }
 
 

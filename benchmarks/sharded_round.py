@@ -1,0 +1,161 @@
+"""Client-axis sharding scaling benchmark (DESIGN.md §11): per-round time
+for the shard_map round + psum aggregation as the data-shard count grows,
+C in {32, 128, 512} at data shards {1, 2, 4, 8}.
+
+Run standalone (forces 8 host devices BEFORE jax initializes):
+
+    PYTHONPATH=src python benchmarks/sharded_round.py [--smoke]
+
+or through the registry (``make bench-sharded`` /
+``python -m benchmarks.run --only sharded_round`` — shard counts are
+clipped to whatever devices the process already has, and anything dropped
+is logged, never silently skipped).
+
+Two series per (C, shards). ``host_blocked_ms_per_round`` here is the
+TOTAL time the host loop is blocked = readback waits
+(``readback_ms_per_round`` — the only component the sibling
+controller_driver benchmark counts under this name) + time blocked
+inside the dispatch calls (``dispatch_ms_per_round``,
+``TrainDriver.dispatch_s`` — on the synchronous CPU backend the dispatch
+call blocks on the round's compute; under true async dispatch it goes to
+~0). Both components are emitted per row so the files stay comparable:
+
+  * ``sync``    — TrainDriver(overlap=0): every round host-synced before
+    the next dispatch — the headline scaling series;
+  * ``overlap`` — TrainDriver(overlap=1): the steady-state production
+    loop.
+
+Rows append to ``experiments/sharded_round.jsonl``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":
+    # must precede ANY jax import: device count locks on first init
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+    )
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.controller import ControllerConfig, ControllerCore  # noqa: E402
+from repro.core.driver import TrainDriver  # noqa: E402
+from repro.core.engine import EngineConfig, RoundEngine  # noqa: E402
+from repro.data.device import DeviceShards  # noqa: E402
+from repro.data.synthetic import (  # noqa: E402
+    Dataset,
+    binarize_even_odd,
+    make_classification,
+)
+from repro.launch.mesh import make_federated_mesh  # noqa: E402
+from repro.models.model import build_model_by_name  # noqa: E402
+
+N_PER_CLIENT = 64
+TAU_MAX, BATCH, ETA = 4, 16, 0.05
+
+
+def _clients(C: int):
+    orig = make_classification(C * N_PER_CLIENT, (784,), 10, seed=1)
+    train = binarize_even_odd(orig)
+    return [Dataset(train.x[i::C], train.y[i::C]) for i in range(C)]
+
+
+def bench_one(model, ds, C: int, shards: int, rounds: int, overlap: int):
+    mesh = make_federated_mesh(shards) if shards > 1 else None
+    p = np.full(C, 1.0 / C, np.float32)
+    eng = RoundEngine(
+        model.loss,
+        EngineConfig(mode="fedveca", eta=ETA, tau_max=TAU_MAX,
+                     batch_size=BATCH),
+        shards=DeviceShards.from_datasets(ds, mesh=mesh),
+        num_clients=C,
+        controller=ControllerCore(
+            ControllerConfig(eta=ETA, tau_max=TAU_MAX), C, mesh=mesh
+        ),
+        mesh=mesh,
+    )
+    drv = TrainDriver(eng, p, overlap=overlap, seed=0)
+    taus = np.full(C, 2, np.int32)
+    drv.run(model.init(jax.random.PRNGKey(0)), 3, taus)  # compile + warmup
+    t0 = time.perf_counter()
+    drv.run(model.init(jax.random.PRNGKey(0)), rounds, taus)
+    wall = (time.perf_counter() - t0) / rounds
+    return (1e3 * drv.host_blocked_s / rounds, 1e3 * drv.dispatch_s / rounds,
+            1e3 * wall)
+
+
+def run(scale=None, out_rows: list = None, csv_dir=None, *,
+        sizes=(32, 128, 512), shard_counts=(1, 2, 4, 8), rounds=10,
+        json_path=None):
+    rows = out_rows if out_rows is not None else []
+    n_dev = len(jax.devices())
+    usable = [k for k in shard_counts if k <= n_dev]
+    dropped = [k for k in shard_counts if k > n_dev]
+    if dropped:
+        print(f"# sharded_round: only {n_dev} device(s); dropping shard "
+              f"counts {dropped} (run standalone to force 8 host devices)",
+              file=sys.stderr)
+    model = build_model_by_name("svm-mnist")
+    json_rows = []
+    for C in sizes:
+        ds = _clients(C)
+        base = {}
+        for k in usable:
+            for series, overlap in (("sync", 0), ("overlap", 1)):
+                readback_ms, dispatch_ms, wall_ms = bench_one(
+                    model, ds, C, k, rounds, overlap)
+                headline = readback_ms + dispatch_ms
+                if k == usable[0]:
+                    base[series] = headline
+                jrow = dict(
+                    bench="sharded_round", C=C, data_shards=k, series=series,
+                    rounds=rounds,
+                    host_blocked_ms_per_round=round(headline, 4),
+                    readback_ms_per_round=round(readback_ms, 4),
+                    dispatch_ms_per_round=round(dispatch_ms, 4),
+                    wall_ms_per_round=round(wall_ms, 4),
+                    vs_one_shard=round(headline / base[series], 4),
+                )
+                json_rows.append(jrow)
+                print(json.dumps(jrow))
+                rows.append(dict(
+                    name=f"sharded_round/{series}/C{C}/shards{k}",
+                    us_per_call=1e3 * headline,
+                    derived=(f"dispatch_ms={dispatch_ms:.2f}|"
+                             f"wall_ms={wall_ms:.2f}|"
+                             f"vs_shards1={headline / base[series]:.2f}x"),
+                ))
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "a") as f:
+            for jrow in json_rows:
+                f.write(json.dumps(jrow) + "\n")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: C in {32, 128}, few rounds")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--json", default="experiments/sharded_round.jsonl")
+    args = ap.parse_args()
+    sizes = (32, 128) if args.smoke else (32, 128, 512)
+    rounds = args.rounds or (4 if args.smoke else 10)
+    run(sizes=sizes, rounds=rounds, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

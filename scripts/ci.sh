@@ -13,10 +13,18 @@ python -m pytest --collect-only -q
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
+echo "== multi-device: sharded round (8 forced host devices) =="
+# separate process on purpose: jax locks the device count at first init,
+# and the tier-1 pytest above must keep the real single device
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  python -m pytest -x -q tests/test_sharded_round.py
+
 if [ "${1:-all}" = "all" ]; then
   echo "== smoke: examples/quickstart.py =="
   python examples/quickstart.py --rounds 3
   echo "== smoke: benchmarks/controller_driver.py =="
   python benchmarks/controller_driver.py --smoke
+  echo "== smoke: benchmarks/sharded_round.py =="
+  python benchmarks/sharded_round.py --smoke
 fi
 echo "CI OK"

@@ -38,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fedveca import RoundStats
-from repro.core.tree import tree_norm, tree_sqnorm, tree_sub, tree_zeros_like
+from repro.core.tree import tree_norm, tree_sqnorm, tree_sub
 
 _STAT_KEYS = ("loss0", "beta", "delta", "g0_sqnorm")
 
@@ -265,40 +265,66 @@ class ControllerCore:
     update (L estimate, Theorem-2 alpha clamp, Eq. 15 tau prediction)
     entirely on device. ``adapt=False`` keeps taus fixed (FedAvg/FedNova
     baselines) while still tracking L for premise logging parity.
+
+    With ``mesh`` (a federated mesh, DESIGN.md §11) the per-client [C]
+    arrays — taus, ever, stale_w, vals — are placed sharded over the
+    client axes, co-located with each shard's data, while the scalar state
+    and the two retained gradient pytrees stay replicated; the step's math
+    is unchanged (GSPMD partitions the [C] elementwise work and inserts
+    the tiny all-reduces for the means/min).
     """
 
     def __init__(self, cfg: ControllerConfig, num_clients: int, *,
-                 adapt: bool = True):
+                 adapt: bool = True, mesh=None):
         if not 0.0 < cfg.decay <= 1.0:
             raise ValueError(f"decay must be in (0, 1], got {cfg.decay}")
         self.cfg = cfg
         self.C = num_clients
         self.adapt = adapt
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.sharding.api import validate_client_count
+
+            validate_client_count(mesh, num_clients)
 
     def init_state(self, params_like: Any, taus: np.ndarray) -> CoreState:
         """Fresh round-0 state; ``params_like`` fixes the gradient trees'
         structure (zeros, so the k=1/k=2 L branches are NaN-free)."""
         # every leaf must be a DISTINCT buffer: the engine donates the whole
         # state, and donating one buffer twice is a runtime error
+        put_rep = put_client = lambda x: x  # noqa: E731
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.sharding.api import client_sharding
+
+            rep = NamedSharding(self.mesh, PartitionSpec())
+            put_rep = lambda x: jax.device_put(x, rep)  # noqa: E731
+            put_client = lambda x: jax.device_put(  # noqa: E731
+                x, client_sharding(self.mesh, 1)
+            )
+
         def f32():
-            return jnp.zeros((), jnp.float32)  # fresh fill => fresh buffer
+            return put_rep(jnp.zeros((), jnp.float32))  # fresh buffer each
 
         zeros = jax.tree.map(
-            lambda x: jnp.zeros(x.shape, jnp.float32), params_like
+            lambda x: put_rep(jnp.zeros(x.shape, jnp.float32)), params_like
+        )
+        zeros2 = jax.tree.map(
+            lambda x: put_rep(jnp.zeros(x.shape, jnp.float32)), params_like
         )
         return CoreState(
-            round=jnp.array(0, jnp.int32),
+            round=put_rep(jnp.array(0, jnp.int32)),
             L=f32(),
             prev_global_grad=zeros,
-            prev2_global_grad=tree_zeros_like(zeros),
+            prev2_global_grad=zeros2,
             prev_grad_sqnorm=f32(),
             params0_sqnorm=f32(),
             prev_update_sqnorm=f32(),
             prev2_update_sqnorm=f32(),
-            taus=jnp.array(np.asarray(taus, np.int32)),
-            ever=jnp.array(np.zeros(self.C, bool)),
-            stale_w=jnp.array(np.zeros(self.C, np.float32)),
-            vals={k: jnp.array(np.zeros(self.C, np.float32))
+            taus=put_client(jnp.array(np.asarray(taus, np.int32))),
+            ever=put_client(jnp.array(np.zeros(self.C, bool))),
+            stale_w=put_client(jnp.array(np.zeros(self.C, np.float32))),
+            vals={k: put_client(jnp.array(np.zeros(self.C, np.float32)))
                   for k in _STAT_KEYS},
         )
 

@@ -22,6 +22,13 @@ sequence does not depend on when results are read back.
 ``host_blocked_s`` accumulates the time the loop spends blocked on
 device->host transfers; ``benchmarks/controller_driver.py`` compares it
 sync vs. overlapped against the legacy numpy-controller loop.
+
+With a client-axis-sharded engine (DESIGN.md §11) nothing here changes
+shape: ``engine.sample_cohort`` already draws per-shard index sets (a
+stratified cohort whose flat, sorted form the driver logs as usual), the
+fused dispatch is one shard_map program, and the deferred ``diag`` fetch
+gathers only [C]-sized arrays. ``benchmarks/sharded_round.py`` records
+host-blocked ms/round against the data-shard count.
 """
 from __future__ import annotations
 
@@ -123,7 +130,11 @@ class TrainDriver:
         self.eval_every = eval_every
         self.batches_fn = batches_fn
         self.on_row = on_row
-        self.host_blocked_s = 0.0
+        self.host_blocked_s = 0.0  # device->host readback waits
+        self.dispatch_s = 0.0  # time inside the dispatch calls themselves:
+        #   ~0 under true async dispatch (TPU); on the CPU backend the call
+        #   blocks on the round's compute, so dispatch_s + host_blocked_s
+        #   is the honest "host loop blocked" total there
         self.tau_all = 0
 
     # -- main loop ----------------------------------------------------------
@@ -139,16 +150,19 @@ class TrainDriver:
         scaffold = None
         pending: deque = deque()
         self.host_blocked_s = 0.0
+        self.dispatch_s = 0.0
         self.tau_all = 0
 
         for k in range(rounds):
             cohort = engine.sample_cohort(rng)
             key, sub = jax.random.split(key)
             batches = self.batches_fn(rng) if self.batches_fn else None
+            t0 = time.perf_counter()
             params, cstate, scaffold, diag = engine.run_fused(
                 params, cstate, self.p, key=sub, batches=batches,
                 scaffold=scaffold, cohort=cohort,
             )
+            self.dispatch_s += time.perf_counter() - t0
             ev = None
             if self.eval_fn and ((k % self.eval_every) == 0 or k == rounds - 1):
                 ev = self.eval_fn(params)

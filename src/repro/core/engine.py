@@ -19,11 +19,20 @@ The engine composes the pieces that used to be re-implemented per caller:
     host-batched path is still accepted via ``batches=``);
   * cohort sub-sampling: ``m <= C`` participating clients per round with
     weight renormalization (p restricted to the cohort and rescaled to
-    sum to 1), the standard partial-participation knob for Non-IID FL.
+    sum to 1), the standard partial-participation knob for Non-IID FL;
+  * client-axis sharding (``mesh=``, DESIGN.md §11): with a federated
+    mesh the round body runs under ``shard_map`` over the client axes
+    ('pod','data') — each shard's local updates touch only its own
+    clients' data, the server reduce is a shard-local (Pallas or
+    fallback) partial reduce completed by ``jax.lax.psum``, and cohorts
+    are drawn as per-shard index sets so dispatch never gathers client
+    data cross-shard.
 
 The message-passing prototype uses the engine's two half-round entry
 points (``client_update`` / ``server_aggregate``) so its wire protocol
-stays explicit while the math is shared.
+stays explicit while the math is shared; ``client_update_many`` is the
+continuously-batched form (one masked tau_max-trip program serving every
+client message, whatever its tau).
 """
 from __future__ import annotations
 
@@ -35,6 +44,8 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.controller import ControllerCore
 from repro.core.fedveca import ScaffoldState, make_local_update, make_round_step
@@ -79,6 +90,13 @@ class RoundEngine:
     engine's device-resident shards, or ``batches=`` (leaves
     [C, tau_max, b, ...]) to use host-built data. ``cohort=`` (int32 [m])
     restricts the round to a sub-sampled cohort.
+
+    ``mesh=`` (a federated mesh, ``launch/mesh.make_federated_mesh``)
+    shards the client axis: C must divide evenly over the client-axis
+    shards, cohorts must be per-shard balanced (``sample_cohort`` draws
+    them that way), and the round executes as one shard_map program with
+    psum aggregation — numerically matching the single-device round
+    within f32 reduce-ordering tolerance (tests/test_sharded_round.py).
     """
 
     def __init__(
@@ -92,6 +110,7 @@ class RoundEngine:
         #   round: run_fused dispatches round + controller as ONE program
         context: Optional[Callable] = None,  # trace-time ambient (e.g. mesh
         #   logical axis rules); entered around the round body
+        mesh=None,  # federated mesh: shard the client axis over ('pod','data')
     ):
         if cfg.cohort_size is not None and cfg.cohort_size < 1:
             raise ValueError(f"cohort_size must be >= 1, got {cfg.cohort_size}")
@@ -102,12 +121,52 @@ class RoundEngine:
             shards.num_clients if shards is not None else None
         )
         self._context = context or contextlib.nullcontext
+
+        # -- client-axis sharding setup (DESIGN.md §11) ---------------------
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.sharding.api import client_axes, client_shard_count
+
+            self._client_axes = client_axes(mesh)
+            self._n_shards = client_shard_count(mesh)
+        else:
+            self._client_axes = ()
+            self._n_shards = 1
+        self.sharded = self._n_shards > 1
+        if self.sharded:
+            from repro.sharding.api import validate_client_count
+
+            C = self.num_clients
+            if C is None:
+                raise ValueError("sharded engine needs num_clients or shards=")
+            validate_client_count(mesh, C)
+            self._local_C = C // self._n_shards
+            m = cfg.cohort_size
+            if m is not None and m < C and m % self._n_shards:
+                raise ValueError(
+                    f"cohort_size={m} must be a multiple of the "
+                    f"{self._n_shards} client-axis shards (per-shard cohorts)"
+                )
+            if shards is not None and shards.mesh is not mesh:
+                # place the data ONCE at build time, not per dispatch
+                from repro.sharding.api import client_sharding
+
+                def put(a):
+                    return jax.device_put(a, client_sharding(mesh, a.ndim))
+
+                self.shards = shards = DeviceShards(
+                    put(shards.x),
+                    None if shards.y is None else put(shards.y),
+                    put(shards.sizes), mesh=mesh,
+                )
+
         self._strategy = get_strategy(cfg.mode, mu=cfg.mu)
         self._reduce = make_reduce(cfg.aggregator)
+        axis_name = self._client_axes if self.sharded else None
         self._round = make_round_step(
             loss_fn, eta=cfg.eta, tau_max=cfg.tau_max, mode=cfg.mode,
             mu=cfg.mu, unroll_tau=cfg.unroll_tau, stat_dtype=cfg.stat_dtype,
-            aggregator=cfg.aggregator,
+            aggregator=cfg.aggregator, axis_name=axis_name,
         )
         self._local = make_local_update(
             loss_fn, eta=cfg.eta, tau_max=cfg.tau_max, strategy=self._strategy,
@@ -115,27 +174,46 @@ class RoundEngine:
         )
 
         def round_body(params, data, key, batches, tau, p, gprev_sqnorm,
-                       scaffold, cohort):
-            """Shared cohort/data/scaffold plumbing around the fused round."""
+                       scaffold, cohort, offset=None):
+            """Shared cohort/data/scaffold plumbing around the fused round.
+
+            One body serves both execution modes. ``offset=None`` is the
+            single-device path. Inside shard_map, ``offset`` is this
+            shard's first global client id, every client-axis argument
+            holds only the shard's clients, cohort rows carry GLOBAL ids
+            (localized here — never a cross-shard gather; balance is
+            enforced host-side), and the cohort weight normalizer is
+            psum-completed.
+            """
             sub_scaffold = scaffold
+            local = None  # row ids into the (local) client-axis arrays
+            gids = None  # matching GLOBAL client ids (key folding)
             if cohort is not None:
-                tau = tau[cohort]
-                pw = p[cohort]
-                pw = pw / jnp.sum(pw)  # partial participation: renormalize
+                gids = cohort.reshape(-1)
+                local = gids if offset is None else gids - offset
+                tau = tau[local]
+                pw_l = p[local]
+                norm = jnp.sum(pw_l)  # partial participation: renormalize
+                if offset is not None:
+                    norm = jax.lax.psum(norm, self._client_axes)
+                pw = pw_l / norm
                 if scaffold is not None:
                     # c_i rows are per CLIENT ID, not cohort position
                     sub_scaffold = ScaffoldState(
                         c=scaffold.c,
-                        c_i=jax.tree.map(lambda x: x[cohort], scaffold.c_i),
+                        c_i=jax.tree.map(lambda x: x[local], scaffold.c_i),
                     )
             else:
-                pw = p
+                pw = p  # full-C weights already sum to 1 across shards
+                if offset is not None:
+                    gids = offset + jnp.arange(self._local_C, dtype=jnp.int32)
             if batches is None:
                 batches = self.shards.sample(
-                    data, key, cfg.tau_max, cfg.batch_size, cohort
+                    data, key, cfg.tau_max, cfg.batch_size, local,
+                    ids_global=gids,
                 )
             elif cohort is not None:
-                batches = jax.tree.map(lambda x: x[cohort], batches)
+                batches = jax.tree.map(lambda x: x[local], batches)
             with self._context():
                 new_params, stats, new_scaffold = self._round(
                     params, batches, tau, pw, gprev_sqnorm, sub_scaffold
@@ -144,14 +222,61 @@ class RoundEngine:
                 new_scaffold = ScaffoldState(
                     c=new_scaffold.c,
                     c_i=jax.tree.map(
-                        lambda full, rows: full.at[cohort].set(rows),
+                        lambda full, rows: full.at[local].set(rows),
                         scaffold.c_i, new_scaffold.c_i,
                     ),
                 )
             return new_params, stats, new_scaffold, pw
 
+        def sharded_body(params, data, key, batches, tau, p, gprev_sqnorm,
+                         scaffold, cohort):
+            sidx = jnp.int32(0)
+            for a in self._client_axes:
+                sidx = sidx * mesh.shape[a] + jax.lax.axis_index(a)
+            return round_body(params, data, key, batches, tau, p,
+                              gprev_sqnorm, scaffold, cohort,
+                              offset=sidx * self._local_C)
+
+        def dispatch_round(params, data, key, batches, tau, p, gprev_sqnorm,
+                           scaffold, cohort):
+            if not self.sharded:
+                return round_body(params, data, key, batches, tau, p,
+                                  gprev_sqnorm, scaffold, cohort)
+            # build the shard_map at trace time: in/out specs depend on
+            # which optional args (batches/scaffold/cohort) are present
+            from repro.core.fedveca import RoundStats
+
+            cspec = P(self._client_axes if len(self._client_axes) > 1
+                      else self._client_axes[0])
+            rep = P()
+
+            def cs(t):  # leading-client-axis tree
+                return jax.tree.map(lambda _: cspec, t)
+
+            def rs(t):  # replicated tree
+                return jax.tree.map(lambda _: rep, t)
+
+            scaf_spec = (
+                None if scaffold is None
+                else ScaffoldState(c=rs(scaffold.c), c_i=cs(scaffold.c_i))
+            )
+            in_specs = (rs(params), cs(data), None if key is None else rep,
+                        cs(batches), cspec, cspec, rep, scaf_spec,
+                        None if cohort is None else cspec)
+            stats_spec = RoundStats(
+                loss0=cspec, beta=cspec, delta=cspec, g0_sqnorm=cspec,
+                tau=cspec, tau_k=rep, global_grad=rs(params),
+                update_sqnorm=rep, params_sqnorm=rep, global_grad_sqnorm=rep,
+            )
+            out_specs = (rs(params), stats_spec, scaf_spec, cspec)
+            return shard_map(
+                sharded_body, mesh=mesh, in_specs=in_specs,
+                out_specs=out_specs, check_rep=False,
+            )(params, data, key, batches, tau, p, gprev_sqnorm, scaffold,
+              cohort)
+
         def step(params, data, key, batches, tau, p, gprev_sqnorm, scaffold, cohort):
-            new_params, stats, new_scaffold, _ = round_body(
+            new_params, stats, new_scaffold, _ = dispatch_round(
                 params, data, key, batches, tau, p, gprev_sqnorm, scaffold, cohort
             )
             return new_params, stats, new_scaffold
@@ -168,13 +293,14 @@ class RoundEngine:
             caller decides when to block on them.
             """
             taus_full = jnp.clip(cstate.taus, 1, cfg.tau_max)
-            new_params, stats, new_scaffold, pw = round_body(
+            new_params, stats, new_scaffold, pw = dispatch_round(
                 params, data, key, batches, taus_full, p,
                 cstate.prev_grad_sqnorm, scaffold, cohort,
             )
             C = taus_full.shape[0]
+            cohort_flat = None if cohort is None else cohort.reshape(-1)
             members = (
-                jnp.arange(C, dtype=jnp.int32) if cohort is None else cohort
+                jnp.arange(C, dtype=jnp.int32) if cohort is None else cohort_flat
             )
             new_cstate, diag = self.controller.step(
                 cstate, stats, members, taus_full
@@ -184,7 +310,7 @@ class RoundEngine:
                 train_loss=jnp.sum(pw * stats.loss0),
                 tau_k=stats.tau_k,
                 tau_round_sum=jnp.sum(
-                    taus_full if cohort is None else taus_full[cohort]
+                    taus_full if cohort is None else taus_full[cohort_flat]
                 ),
                 update_sqnorm=stats.update_sqnorm,
             )
@@ -205,6 +331,26 @@ class RoundEngine:
                         loss0=out["loss0"])
 
         self._client_update = jax.jit(client_update)
+
+        def client_update_many(params, batches_stacked, taus, gprev_sqnorm):
+            """M clients' Alg. 2 in one dispatch: leaves [M, tau_max, b, ...]
+            with per-client tau masking — the continuously-batched serving
+            form of ``client_update`` (one static-shape program handles any
+            mix of taus; steps past tau_i are masked no-ops)."""
+            with self._context():
+                zeros = tree_zeros_like(params)
+                outs = jax.vmap(
+                    self._local, in_axes=(None, 0, 0, None, None, None)
+                )(params, batches_stacked, taus, gprev_sqnorm, zeros, zeros)
+            tau_f = taus.astype(jnp.float32)
+            G = jax.tree.map(
+                lambda x: x / tau_f.reshape((-1,) + (1,) * (x.ndim - 1)),
+                outs["cum_g"],
+            )
+            return dict(G=G, g0=outs["g0"], beta=outs["beta"],
+                        delta=outs["delta"], loss0=outs["loss0"])
+
+        self._client_update_many = jax.jit(client_update_many)
 
         def server_aggregate(params, G_stacked, tau, p):
             tau_f = tau.astype(jnp.float32)
@@ -230,7 +376,7 @@ class RoundEngine:
         data = self._resolve_data(batches, key)
         tau = jnp.asarray(tau, jnp.int32)
         p = jnp.asarray(p, jnp.float32)
-        cohort = None if cohort is None else jnp.asarray(cohort, jnp.int32)
+        cohort = self._prep_cohort(cohort)
         scaffold = self._materialize_scaffold(scaffold, params, int(tau.shape[0]))
         with _quiet_donation():
             return self._step(params, data, key, batches, tau, p,
@@ -257,11 +403,39 @@ class RoundEngine:
             raise ValueError("engine built without controller=ControllerCore")
         data = self._resolve_data(batches, key)
         p = jnp.asarray(p, jnp.float32)
-        cohort = None if cohort is None else jnp.asarray(cohort, jnp.int32)
+        cohort = self._prep_cohort(cohort)
         scaffold = self._materialize_scaffold(scaffold, params, self.controller.C)
         with _quiet_donation():
             return self._fused(params, cstate, data, key, batches, p, scaffold,
                                cohort)
+
+    def _prep_cohort(self, cohort):
+        """Host-side cohort normalization. Single-device: int32 [m].
+        Sharded: [n_shards, m/n_shards] with row s holding ONLY shard s's
+        client ids — validated here so the device program never needs a
+        cross-shard gather (sample_cohort draws cohorts in this shape)."""
+        if cohort is None:
+            return None
+        if not self.sharded:
+            return jnp.asarray(cohort, jnp.int32)
+        c = np.asarray(cohort, np.int32)
+        K, C_loc = self._n_shards, self._local_C
+        if c.ndim == 1:
+            if c.size % K:
+                raise ValueError(
+                    f"sharded cohort size {c.size} must be a multiple of "
+                    f"{K} shards (use sample_cohort)"
+                )
+            c = np.sort(c).reshape(K, c.size // K)
+        owners = c // C_loc
+        if not np.array_equal(owners, np.broadcast_to(
+                np.arange(K, dtype=np.int32)[:, None], c.shape)):
+            raise ValueError(
+                "cohort is not per-shard balanced: each shard must "
+                f"contribute exactly {c.shape[1]} of its own clients "
+                "(use sample_cohort)"
+            )
+        return jnp.asarray(c)
 
     def _resolve_data(self, batches, key):
         """Shared data-path contract for run_round/run_fused: host batches
@@ -301,6 +475,20 @@ class RoundEngine:
             jnp.asarray(gprev_sqnorm, jnp.float32),
         )
 
+    def client_update_many(self, params, batches_stacked, taus, gprev_sqnorm):
+        """Alg. 2 for M clients as ONE batched dispatch (the serving path's
+        continuous batcher): leaves [M, tau_max, b, ...], ``taus`` [M]
+        int32. Per client this is ``client_update`` up to last-ulp f32
+        rounding (vmap lowers the per-batch gradient reductions
+        differently) — padding batches to tau_max changes nothing because
+        steps past tau_i are masked no-ops. One trace serves every tau
+        mix (no per-T retraces).
+        """
+        return self._client_update_many(
+            params, batches_stacked, jnp.asarray(taus, jnp.int32),
+            jnp.asarray(gprev_sqnorm, jnp.float32),
+        )
+
     def server_aggregate(self, params, G_stacked, tau, p):
         """Alg. 1 line 7 over stacked normalized vectors (leaves [C, ...])."""
         return self._server_aggregate(
@@ -319,8 +507,21 @@ class RoundEngine:
         ``rng`` is a ``np.random.Generator`` (``np.random.default_rng``);
         the legacy ``RandomState`` also works (same ``choice`` API) but new
         call sites should pass a Generator.
+
+        Sharded engines draw STRATIFIED cohorts — m/n_shards clients from
+        each shard's own id range — so the cohort is a per-shard index set
+        and dispatch never gathers client data across shards. The flat
+        array is still sorted (shard id ranges are contiguous).
         """
         m, C = self.cfg.cohort_size, self.num_clients
         if m is None or C is None or m >= C:
             return None
-        return np.sort(rng.choice(C, size=m, replace=False)).astype(np.int32)
+        if not self.sharded:
+            return np.sort(rng.choice(C, size=m, replace=False)).astype(np.int32)
+        K, C_loc = self._n_shards, self._local_C
+        per = m // K  # divisibility enforced at construction
+        rows = [
+            s * C_loc + np.sort(rng.choice(C_loc, size=per, replace=False))
+            for s in range(K)
+        ]
+        return np.concatenate(rows).astype(np.int32)

@@ -29,7 +29,14 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.strategy import MODES, Strategy, get_strategy, make_reduce
+from repro.core.strategy import (
+    MODES,
+    Strategy,
+    get_strategy,
+    global_sum,
+    make_reduce,
+    psum_reduce,
+)
 from repro.core.tree import (
     tree_axpy,
     tree_sqnorm,
@@ -161,6 +168,11 @@ def make_round_step(
     #   bf16 halves accumulator HBM traffic and the two model-sized
     #   all-reduces (beyond-paper; quantify in EXPERIMENTS.md §Perf)
     aggregator="fallback",  # 'pallas' | 'fallback' | 'auto' | Reduce callable
+    axis_name=None,  # client mesh axis name(s) when the round body runs
+    #   inside shard_map: the client-axis arguments then hold only the
+    #   local shard's clients, the server reduce becomes shard-local
+    #   partial + jax.lax.psum, and every cross-client scalar (tau_k, the
+    #   global gradient) is psum-completed (DESIGN.md §11)
 ) -> Callable:
     """Build the jitted federated round.
 
@@ -174,10 +186,16 @@ def make_round_step(
       gprev_sqnorm: scalar ||grad F(w_{k-1})||^2 (server broadcast, Alg. 2
                     line 14/17); pass 0.0 in round 0 (delta falls back to 1)
       -> (new_params, RoundStats, new_scaffold)
+
+    With ``axis_name`` the same contract holds per shard: C is the LOCAL
+    client count, per-client stats come back local-sized, and the model-
+    sized outputs (new_params, global_grad) are replicated across shards.
     """
     assert mode in MODES, mode
     strategy = get_strategy(mode, mu=mu)
     reduce = make_reduce(aggregator)
+    if axis_name is not None:
+        reduce = psum_reduce(reduce, axis_name)
     local_update = make_local_update(
         loss_fn, eta=eta, tau_max=tau_max, strategy=strategy,
         unroll_tau=unroll_tau, stat_dtype=stat_dtype,
@@ -197,14 +215,16 @@ def make_round_step(
             local_update, in_axes=(None, 0, 0, None, None, 0)
         )(params, batches, tau, gprev_sqnorm, c_server, c_client)
 
-        tau_k = jnp.sum(p * tau_f)
-        delta_w = strategy.server_delta(outs, params, tau_f, p, eta, reduce)
+        tau_k = global_sum(p * tau_f, axis_name)
+        delta_w = strategy.server_delta(outs, params, tau_f, p, eta, reduce,
+                                        axis_name)
         new_params = tree_axpy(1.0, delta_w, params)
 
         new_scaffold = scaffold
         if strategy.uses_scaffold:
             new_scaffold = strategy.update_scaffold(
-                outs, params, ScaffoldState(c=c_server, c_i=c_client), tau_f, eta
+                outs, params, ScaffoldState(c=c_server, c_i=c_client), tau_f,
+                eta, axis_name,
             )
 
         # Eq. (8): global gradient + per-client ||g0||^2 from the same reduce

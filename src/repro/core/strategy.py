@@ -50,6 +50,28 @@ def fallback_reduce(stacked, w, scale):
     return out, sqn
 
 
+def psum_reduce(base: "Reduce", axis_name) -> "Reduce":
+    """Client-axis-sharded reduce (DESIGN.md §11): inside a shard_map body
+    the stacked leaves hold only the shard's clients, so ``base`` (Pallas
+    or fallback) computes the shard-local partial weighted sum and a
+    ``jax.lax.psum`` over the client mesh axes completes it. The
+    per-client squared norms stay shard-local ([C_local]) — they are
+    per-client outputs, reassembled by the shard_map out_spec."""
+
+    def reduce(stacked, w, scale):
+        out, sqn = base(stacked, w, scale)
+        return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), out), sqn
+
+    return reduce
+
+
+def global_sum(x, axis_name=None):
+    """sum(x) over the (possibly sharded) client axis: local jnp.sum plus a
+    psum over the client mesh axes when running inside the sharded round."""
+    s = jnp.sum(x)
+    return s if axis_name is None else jax.lax.psum(s, axis_name)
+
+
 def pallas_reduce(stacked, w, scale):
     """Fused vecavg kernel: one [C, D_total] pass, norms ride along."""
     from repro.kernels.vecavg.ops import vecavg_tree
@@ -93,7 +115,11 @@ class Strategy:
         return g
 
     # -- server half (Alg. 1 line 7) ----------------------------------------
-    def delta_from_normalized(self, G, tau_f, p, eta, reduce: Reduce):
+    # ``axis_name`` is the client mesh axis tuple when the round runs inside
+    # shard_map (tau_f/p/outs then hold only the shard's clients and
+    # ``reduce`` is psum-wrapped); None on the single-device path.
+    def delta_from_normalized(self, G, tau_f, p, eta, reduce: Reduce,
+                              axis_name=None):
         """Global step from *normalized* client vectors G_i = cum_g_i/tau_i.
 
         This is the message-passing server's entry point: the wire carries
@@ -101,13 +127,14 @@ class Strategy:
         """
         raise NotImplementedError
 
-    def server_delta(self, outs, params, tau_f, p, eta, reduce: Reduce):
+    def server_delta(self, outs, params, tau_f, p, eta, reduce: Reduce,
+                     axis_name=None):
         """Global step from the fused round's stacked outputs dict."""
-        C = tau_f.shape[0]
         G = jax.tree.map(lambda x: x / _per_client(tau_f, x), outs["cum_g"])
-        return self.delta_from_normalized(G, tau_f, p, eta, reduce)
+        return self.delta_from_normalized(G, tau_f, p, eta, reduce, axis_name)
 
-    def update_scaffold(self, outs, params, scaffold, tau_f, eta):
+    def update_scaffold(self, outs, params, scaffold, tau_f, eta,
+                        axis_name=None):
         return scaffold
 
 
@@ -117,8 +144,8 @@ class FedVecaStrategy(Strategy):
 
     name = "fedveca"
 
-    def delta_from_normalized(self, G, tau_f, p, eta, reduce):
-        tau_k = jnp.sum(p * tau_f)
+    def delta_from_normalized(self, G, tau_f, p, eta, reduce, axis_name=None):
+        tau_k = global_sum(p * tau_f, axis_name)
         delta_w, _ = reduce(G, p, -eta * tau_k)
         return delta_w
 
@@ -134,12 +161,13 @@ class FedAvgStrategy(Strategy):
 
     name = "fedavg"
 
-    def delta_from_normalized(self, G, tau_f, p, eta, reduce):
+    def delta_from_normalized(self, G, tau_f, p, eta, reduce, axis_name=None):
         cum_g = jax.tree.map(lambda x: x * _per_client(tau_f, x), G)
         delta_w, _ = reduce(cum_g, p, -eta)
         return delta_w
 
-    def server_delta(self, outs, params, tau_f, p, eta, reduce):
+    def server_delta(self, outs, params, tau_f, p, eta, reduce,
+                     axis_name=None):
         delta_w, _ = reduce(outs["cum_g"], p, -eta)
         return delta_w
 
@@ -172,7 +200,8 @@ class ScaffoldStrategy(Strategy):
             g, c_server, c_client,
         )
 
-    def server_delta(self, outs, params, tau_f, p, eta, reduce):
+    def server_delta(self, outs, params, tau_f, p, eta, reduce,
+                     axis_name=None):
         local_delta = jax.tree.map(
             lambda wc, w0: wc.astype(jnp.float32) - w0.astype(jnp.float32)[None],
             outs["params"], params,
@@ -180,12 +209,14 @@ class ScaffoldStrategy(Strategy):
         delta_w, _ = reduce(local_delta, p, 1.0)
         return delta_w
 
-    def update_scaffold(self, outs, params, scaffold, tau_f, eta):
+    def update_scaffold(self, outs, params, scaffold, tau_f, eta,
+                        axis_name=None):
         # c_i' = c_i - c + (w_k - w_i^tau)/(tau_i * eta); c' = c + mean(dc)
         from repro.core.fedveca import ScaffoldState
         from repro.core.tree import tree_axpy
 
         C = tau_f.shape[0]
+        C_total = global_sum(jnp.ones_like(tau_f), axis_name)
         c_server, c_client = scaffold.c, scaffold.c_i
         inv = 1.0 / (tau_f * eta)
         c_i_new = jax.tree.map(
@@ -198,7 +229,12 @@ class ScaffoldStrategy(Strategy):
             c_client, c_server, outs["params"], params,
         )
         dc = jax.tree.map(lambda a, b: a - b, c_i_new, c_client)
-        c_new = tree_axpy(1.0, tree_weighted_sum(dc, jnp.full((C,), 1.0 / C)), c_server)
+        mean_dc = tree_weighted_sum(dc, jnp.full((C,), 1.0) / C_total)
+        if axis_name is not None:
+            mean_dc = jax.tree.map(
+                lambda x: jax.lax.psum(x, axis_name), mean_dc
+            )
+        c_new = tree_axpy(1.0, mean_dc, c_server)
         return ScaffoldState(c=c_new, c_i=c_i_new)
 
 

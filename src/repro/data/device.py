@@ -1,4 +1,4 @@
-"""On-device federated data path (DESIGN.md §3).
+"""On-device federated data path (DESIGN.md §3, §11).
 
 The seed hot path rebuilt a host-side ``[C, tau_max, batch, ...]`` tensor
 with numpy fancy-indexing every round and re-uploaded it — at LM scale
@@ -7,6 +7,20 @@ into device-resident ``[C, N_max, ...]`` buffers (padded to the largest
 shard; padding rows are never sampled because indices are drawn modulo the
 true shard size) and the per-step minibatch *indices* are drawn inside the
 jitted round with ``jax.random`` — zero host->device bytes per round.
+
+**Client-axis sharding.** ``from_datasets(..., mesh=)`` places every
+leaf's leading C dimension over the mesh's client axes (('pod','data'),
+see ``sharding/api.client_sharding``): each data shard holds only its own
+C/K clients' rows, uploaded straight to the owning device — no
+single-device staging copy. Rows are padded to the global N_max (one
+jax.Array needs a uniform shape) but the padding lives on the owning
+shard and, as everywhere else, is never sampled.
+
+**Per-client index streams.** ``sample`` folds the round key with each
+client's GLOBAL id before drawing, so the indices client i draws depend
+only on (key, i, size_i) — not on which clients share its buffer or which
+shard holds it. The shard-local sampler inside the sharded round therefore
+draws bit-identical minibatches to the single-device round (tested).
 
 Two batch layouts exist in the repo and both are produced here:
 
@@ -46,12 +60,16 @@ class DeviceShards:
 
     ``sample`` is jit-traceable: called inside the round step it adds a
     per-client gather to the program instead of a per-round host upload.
+    With ``mesh``, the leading C axis is sharded over the client axes and
+    ``sample`` runs shard-locally inside the shard_map round.
     """
 
-    def __init__(self, x: jax.Array, y: Optional[jax.Array], sizes: jax.Array):
+    def __init__(self, x: jax.Array, y: Optional[jax.Array], sizes: jax.Array,
+                 *, mesh=None):
         self.x = x
         self.y = y
         self.sizes = sizes
+        self.mesh = mesh
         self.is_lm = jnp.issubdtype(x.dtype, jnp.integer)
 
     @property
@@ -59,20 +77,31 @@ class DeviceShards:
         return int(self.x.shape[0])
 
     @staticmethod
-    def from_datasets(datasets: Sequence[Dataset]) -> "DeviceShards":
+    def from_datasets(datasets: Sequence[Dataset], *, mesh=None) -> "DeviceShards":
+        """Stack per-client datasets into device buffers; with ``mesh``,
+        shard the client axis so each data shard holds only its clients."""
         sizes = np.array([len(d) for d in datasets], np.int32)
         n_max = int(sizes.max())
+
+        put = jnp.asarray
+        if mesh is not None:
+            from repro.sharding.api import client_sharding, validate_client_count
+
+            validate_client_count(mesh, len(datasets))
+
+            def put(a):  # noqa: F811 — straight to the owning shards
+                return jax.device_put(a, client_sharding(mesh, np.ndim(a)))
 
         def pad_stack(arrs):
             out = np.zeros((len(arrs), n_max) + arrs[0].shape[1:], arrs[0].dtype)
             for i, a in enumerate(arrs):
                 out[i, : len(a)] = a
-            return jnp.asarray(out)
+            return put(out)
 
         x = pad_stack([d.x for d in datasets])
         lm = np.issubdtype(datasets[0].x.dtype, np.integer)
         y = None if lm else pad_stack([d.y for d in datasets])
-        return DeviceShards(x, y, jnp.asarray(sizes))
+        return DeviceShards(x, y, put(sizes), mesh=mesh)
 
     # -- traced arguments ---------------------------------------------------
     def tree(self):
@@ -84,21 +113,30 @@ class DeviceShards:
         return arrs
 
     def sample(self, arrs: dict, key: jax.Array, tau_max: int, batch: int,
-               cohort: Optional[jax.Array] = None) -> dict:
+               cohort: Optional[jax.Array] = None,
+               ids_global: Optional[jax.Array] = None) -> dict:
         """Draw leaves [M, tau_max, batch, ...] inside jit (M = cohort size).
 
-        One fused randint draws every client's indices (per-client maxval
-        via broadcast, so padding rows are never sampled) and one gather
-        per array pulls the rows; an optimization barrier keeps the gather
+        ``cohort`` indexes rows of ``arrs`` (LOCAL positions inside a
+        shard_map body); ``ids_global`` are the matching GLOBAL client ids
+        used to fold the key (defaults to ``cohort`` — correct whenever
+        the buffers hold the full client axis). Per-client keys mean a
+        client's index stream is invariant to sharding and cohort
+        composition; padding rows are never sampled (randint maxval is the
+        true shard size). A final optimization barrier keeps the gather
         from being fused into (and re-materialized by) the round body.
         """
         C = arrs["x"].shape[0]
         ids = jnp.arange(C, dtype=jnp.int32) if cohort is None else cohort
-        M = ids.shape[0]
+        gids = ids if ids_global is None else ids_global
         sizes = arrs["sizes"][ids]
-        idx = jax.random.randint(
-            key, (M, tau_max, batch), 0, sizes[:, None, None]
-        )  # [M, tau_max, batch], row m in [0, size_m)
+
+        def draw(gid, size):
+            return jax.random.randint(
+                jax.random.fold_in(key, gid), (tau_max, batch), 0, size
+            )
+
+        idx = jax.vmap(draw)(gids, sizes)  # [M, tau_max, batch]
 
         def gather(stacked):
             return stacked[ids[:, None, None], idx]

@@ -10,6 +10,25 @@ masked local loop the fused round vmaps) and the server reduces through
 prototype and the fused round step cannot drift apart. The message log
 doubles as a wire-protocol trace (bytes counted for the communication
 analysis in EXPERIMENTS.md).
+
+Two dispatch fabrics run the same protocol (ROADMAP serving-path item):
+
+  * ``batched=True`` (default) — the continuous-batching fabric: the
+    server still composes one message per client and accounts its bytes,
+    each client still draws minibatches from its private data, but every
+    reply of the round is computed by ONE ``engine.client_update_many``
+    dispatch (a single masked tau_max-trip program, any tau mix, no
+    per-client jit caches or per-tau retraces);
+  * ``batched=False`` — the literal per-client loop of the testbed, one
+    ``engine.client_update`` call (and one trace per distinct tau) per
+    client message.
+
+Both fabrics run the same math on the same private-data draws (each
+client's RNG stream is consumed identically): padding a batch stack to
+tau_max changes nothing because steps past tau_i are masked no-ops, and
+the only divergence is last-ulp f32 rounding from vmap's batched
+gradient lowering — tau trajectories and wire accounting are exact
+(tested in tests/test_simulator.py).
 """
 from __future__ import annotations
 
@@ -47,10 +66,17 @@ class FedVecaClient:
         # RandomState on purpose: client-local data draws are a recorded
         # seed-reproducibility path (see data/synthetic.py RNG note)
         self.rng = np.random.RandomState(seed + client_id)
-        self.engine = RoundEngine(
-            model.loss, EngineConfig(mode="fedveca", eta=eta, donate=False),
-            num_clients=1,
-        )
+        self._engine = None  # built lazily: the batched fabric never needs it
+
+    @property
+    def engine(self) -> RoundEngine:
+        if self._engine is None:
+            self._engine = RoundEngine(
+                self.model.loss,
+                EngineConfig(mode="fedveca", eta=self.eta, donate=False),
+                num_clients=1,
+            )
+        return self._engine
 
     def _batches(self, tau: int):
         """Leaves [tau, b, ...]: exactly the minibatches the wire pays for."""
@@ -58,6 +84,14 @@ class FedVecaClient:
         if self.data.x.dtype in (np.int32, np.int64):
             return format_batch(self.data.x[idx])
         return format_batch(self.data.x[idx], self.data.y[idx])
+
+    def prepare(self, msg: Dict[str, Any]):
+        """Receive the round message and stage the local compute job: draw
+        this round's minibatches from PRIVATE data (same RNG stream as the
+        serial path — batched and serial runs see identical data). The
+        cluster's shared accelerator runs the staged jobs as one batch."""
+        tau = int(msg["tau"])
+        return tau, self._batches(tau)
 
     def local_round(self, msg: Dict[str, Any]) -> Dict[str, Any]:
         """Receive (w_k, tau_i, ||grad F(w_{k-1})||^2); run Alg. 2 lines 3-19."""
@@ -75,11 +109,13 @@ class FedVecaServer:
 
     def __init__(self, model, clients: List[FedVecaClient], p: np.ndarray,
                  eta: float, alpha: float = 0.95, tau_max: int = 50,
-                 tau_init: int = 2, seed: int = 0):
+                 tau_init: int = 2, seed: int = 0, batched: bool = True):
         self.model = model
         self.clients = clients
         self.p = np.asarray(p, np.float64)
         self.eta = eta
+        self.batched = batched  # one client_update_many dispatch per round
+        self.tau_max = tau_max
         self.engine = RoundEngine(
             model.loss,
             EngineConfig(mode="fedveca", eta=eta, tau_max=tau_max, donate=False),
@@ -97,17 +133,53 @@ class FedVecaServer:
         self.bytes_recv = 0  # clients -> server
         self.history: List[Dict[str, Any]] = []
 
+    def _collect_replies(self) -> List[Dict[str, Any]]:
+        """One message per client out, one reply per client back.
+
+        Batched fabric: the messages and the per-client private data draws
+        stay per client (wire accounting identical to the serial loop) but
+        all replies are computed by ONE ``client_update_many`` dispatch —
+        each job's batch stack is padded to tau_max, where the masked scan
+        makes the extra steps exact no-ops.
+        """
+        msgs = []
+        for c, tau in zip(self.clients, self.taus):
+            msg = dict(w=self.params, tau=int(tau), gprev_sqnorm=self.gprev_sqnorm)
+            self.bytes_sent += _tree_bytes(self.params) + 16
+            msgs.append(msg)
+        if not self.batched:
+            return [c.local_round(m) for c, m in zip(self.clients, msgs)]
+        jobs = [c.prepare(m) for c, m in zip(self.clients, msgs)]
+        taus = np.array([t for t, _ in jobs], np.int32)
+
+        def pad(b):
+            return jax.tree.map(
+                lambda x: jnp.pad(
+                    x, [(0, self.tau_max - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+                ),
+                b,
+            )
+
+        stacked = _stack([pad(b) for _, b in jobs])
+        outs = self.engine.client_update_many(
+            self.params, stacked, taus, float(self.gprev_sqnorm)
+        )
+        return [
+            dict(id=c.id,
+                 G=jax.tree.map(lambda x: x[i], outs["G"]),
+                 g0=jax.tree.map(lambda x: x[i], outs["g0"]),
+                 beta=float(outs["beta"][i]), delta=float(outs["delta"][i]),
+                 loss0=float(outs["loss0"][i]), tau=int(taus[i]))
+            for i, c in enumerate(self.clients)
+        ]
+
     def round(self) -> Dict[str, Any]:
         from repro.core.fedveca import RoundStats
 
         params_start = self.params
-        replies = []
-        for c, tau in zip(self.clients, self.taus):
-            msg = dict(w=self.params, tau=int(tau), gprev_sqnorm=self.gprev_sqnorm)
-            self.bytes_sent += _tree_bytes(self.params) + 16
-            reply = c.local_round(msg)
+        replies = self._collect_replies()
+        for reply in replies:
             self.bytes_recv += _tree_bytes(reply["G"]) + _tree_bytes(reply["g0"]) + 24
-            replies.append(reply)
 
         p32 = np.asarray(self.p, np.float32)
         G_stacked = _stack([r["G"] for r in replies])

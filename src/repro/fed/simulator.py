@@ -24,6 +24,12 @@ partial participation is a config knob (``cohort_size``). With a cohort,
 the controller sees staleness-weighted statistics: non-participants decay
 from their last observed beta/delta toward the cohort mean
 (``stats_decay``; core/controller.CohortStats documents the model).
+
+With ``mesh`` (``launch/mesh.make_federated_mesh``) the whole round is
+client-axis sharded (DESIGN.md §11): the [C, N_max, ...] data buffers,
+the shard_map round with psum aggregation, and the controller's
+per-client state all shard over ('pod','data'); cohorts are drawn as
+per-shard index sets. C and cohort_size must divide the shard count.
 """
 from __future__ import annotations
 
@@ -64,6 +70,9 @@ class FedSimConfig:
     # -- driver knobs -------------------------------------------------------
     overlap: int = 1  # in-flight rounds before host sync; 0 = sync mode
     stats_decay: float = 0.9  # staleness retention for unobserved clients
+    # -- client-axis sharding (DESIGN.md §11) -------------------------------
+    mesh: Optional[object] = None  # federated mesh: shard clients over
+    #   ('pod','data'); None = single-device round
 
 
 class FederatedSimulator:
@@ -83,7 +92,7 @@ class FederatedSimulator:
         self.p = (sizes / sizes.sum()).astype(np.float32)
 
         shards = (
-            DeviceShards.from_datasets(client_data)
+            DeviceShards.from_datasets(client_data, mesh=cfg.mesh)
             if cfg.data_path == "device"
             else None
         )
@@ -101,8 +110,10 @@ class FederatedSimulator:
             shards=shards,
             num_clients=self.C,
             controller=ControllerCore(
-                ctrl_cfg, self.C, adapt=(cfg.mode == "fedveca")
+                ctrl_cfg, self.C, adapt=(cfg.mode == "fedveca"),
+                mesh=cfg.mesh,
             ),
+            mesh=cfg.mesh,
         )
         # the numpy twin stays constructible for oracle tests / external use
         self.controller = FedVecaController(ctrl_cfg, self.C)

@@ -19,6 +19,12 @@ Rounds run through ``core/driver.TrainDriver``: the controller is fused
 into the jitted round (device-resident Alg. 1 state) and round k+1 is
 dispatched while round k's diagnostics are still in flight (--overlap;
 0 = sync debugging mode).
+
+--mesh "data=K" (optionally "pod=J,data=K") builds a federated client
+mesh and shards the whole round over it (DESIGN.md §11): data buffers,
+shard_map round with psum aggregation, controller per-client state. Run
+under XLA_FLAGS=--xla_force_host_platform_device_count=8 to exercise it
+on a CPU box.
 """
 from __future__ import annotations
 
@@ -35,7 +41,12 @@ from repro.core.driver import TrainDriver
 from repro.core.engine import EngineConfig, RoundEngine
 from repro.data.device import DeviceShards, host_stacked_batches
 from repro.data.synthetic import make_lm_tokens
-from repro.launch.mesh import make_host_mesh, make_production_mesh, num_clients
+from repro.launch.mesh import (
+    make_federated_mesh,
+    make_host_mesh,
+    make_production_mesh,
+    num_clients,
+)
 from repro.models.model import build_model
 from repro.sharding.api import logical_axis_rules
 
@@ -61,6 +72,11 @@ def main():
                     help="rounds in flight before host sync (0 = sync mode)")
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 pod mesh (requires 256 devices)")
+    ap.add_argument("--mesh", default=None, metavar="data=K[,pod=J]",
+                    help="client-axis sharding: shard the round over a "
+                         "('pod','data') federated mesh (DESIGN.md §11)")
+    ap.add_argument("--clients-per-shard", type=int, default=2,
+                    help="clients per client-axis shard under --mesh")
     ap.add_argument("--data-axis", type=int, default=2)
     ap.add_argument("--model-axis", type=int, default=1)
     args = ap.parse_args()
@@ -69,15 +85,27 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
-    mesh = (
-        make_production_mesh()
-        if args.production_mesh
-        else make_host_mesh(args.data_axis, args.model_axis)
-    )
-    C = num_clients(mesh)
+    fed_mesh = None
+    if args.mesh:
+        try:
+            spec = dict(kv.split("=") for kv in args.mesh.split(","))
+            pod, data = int(spec.get("pod", 1)), int(spec["data"])
+        except (KeyError, ValueError):
+            ap.error(f"--mesh {args.mesh!r}: expected data=K or pod=J,data=K")
+        mesh = make_federated_mesh(pod * data, pod=pod)
+        fed_mesh = mesh
+        C = num_clients(mesh) * args.clients_per_shard
+    else:
+        mesh = (
+            make_production_mesh()
+            if args.production_mesh
+            else make_host_mesh(args.data_axis, args.model_axis)
+        )
+        C = num_clients(mesh)
     shape = ShapeConfig("cli", args.seq, C * args.batch_per_client, "train")
     print(f"arch={cfg.name} mesh={dict(mesh.shape)} clients={C} "
           f"global_batch={shape.global_batch} seq={shape.seq_len} "
+          f"sharded={fed_mesh is not None} "
           f"data={'host' if args.host_data else 'device'} "
           f"cohort={args.cohort or C} overlap={args.overlap}")
 
@@ -93,13 +121,17 @@ def main():
             batch_size=args.batch_per_client, cohort_size=args.cohort,
             aggregator=args.aggregator,
         ),
-        shards=None if args.host_data else DeviceShards.from_datasets(datasets),
+        shards=(
+            None if args.host_data
+            else DeviceShards.from_datasets(datasets, mesh=fed_mesh)
+        ),
         num_clients=C,
         controller=ControllerCore(
             ControllerConfig(eta=args.eta, alpha=args.alpha, tau_max=args.tau_max),
-            C, adapt=(args.mode == "fedveca"),
+            C, adapt=(args.mode == "fedveca"), mesh=fed_mesh,
         ),
         context=lambda: logical_axis_rules(mesh, {"batch": None}),
+        mesh=fed_mesh,
     )
 
     params = model.init(jax.random.PRNGKey(0))

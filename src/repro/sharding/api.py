@@ -79,6 +79,55 @@ def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]]) -> Optional
     return P(*out)
 
 
+def client_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The mesh axes the federated client dimension shards over, in mesh
+    order — ('pod', 'data') filtered to the axes this mesh actually has
+    (DESIGN.md §11). One source of truth for the sharded data path, the
+    shard_map round, and the controller's per-client state."""
+    from repro.launch.mesh import CLIENT_AXES
+
+    return tuple(a for a in CLIENT_AXES if a in mesh.shape)
+
+
+def client_shard_count(mesh: Mesh) -> int:
+    """Number of client-axis shards = product of the client axes' extents."""
+    n = 1
+    for a in client_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def validate_client_count(mesh: Optional[Mesh], num_clients: int) -> int:
+    """Enforce the ONE client-axis divisibility rule (every layer — data,
+    engine, controller — calls this instead of re-implementing it):
+    C must divide evenly over the client-axis shards. Returns the shard
+    count (1 for mesh=None, when anything divides)."""
+    if mesh is None:
+        return 1
+    k = client_shard_count(mesh)
+    if k > 1 and num_clients % k:
+        raise ValueError(
+            f"C={num_clients} clients must divide evenly over {k} "
+            f"client-axis shards ({dict(mesh.shape)})"
+        )
+    return k
+
+
+def client_spec(mesh: Mesh, ndim: int = 1) -> P:
+    """PartitionSpec placing a leading client axis over ``client_axes``;
+    trailing dims replicated. ndim=0 (scalars) yields the replicated spec."""
+    axes = client_axes(mesh)
+    if ndim < 1 or not axes:
+        return P()
+    lead = axes if len(axes) > 1 else axes[0]
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def client_sharding(mesh: Mesh, ndim: int = 1) -> NamedSharding:
+    """NamedSharding form of ``client_spec`` for explicit device_put."""
+    return NamedSharding(mesh, client_spec(mesh, ndim))
+
+
 def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
     """with_sharding_constraint by logical axis names; no-op w/o a context."""
     ctx = getattr(_state, "ctx", None)

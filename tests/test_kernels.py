@@ -30,6 +30,29 @@ def test_vecavg_matches_ref(C, D, dtype):
     np.testing.assert_allclose(np.asarray(sqn), np.asarray(sqn_r), rtol=1e-4)
 
 
+@pytest.mark.skipif(
+    jax.default_backend() not in ("tpu", "gpu"),
+    reason="compile-path (non-interpret) Pallas needs an accelerator "
+    "backend; CPU runs the interpret-mode sweep above",
+)
+@pytest.mark.parametrize("C,D", [(8, 1024), (32, 4096)])
+def test_vecavg_compile_path_matches_ref(C, D):
+    """Natively-compiled vecavg (interpret=False) == the jnp oracle — the
+    on-TPU validation half of the ROADMAP 'vecavg on-TPU' item (the
+    roofline row lives in benchmarks/roofline.py)."""
+    from repro.kernels.vecavg.kernel import vecavg_pallas
+
+    r = np.random.RandomState(C + D)
+    u = jnp.asarray(r.randn(C, D), jnp.float32)
+    p = jnp.asarray(np.abs(r.rand(C)) + 0.1, jnp.float32)
+    p = p / p.sum()
+    dw, sqn = vecavg_pallas(u, p, 0.31, block_d=512, interpret=False)
+    dw_r, sqn_r = va_ref.vecavg(u, p, 0.31)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(dw_r),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(sqn), np.asarray(sqn_r), rtol=1e-4)
+
+
 def test_vecavg_tree_roundtrip():
     r = np.random.RandomState(0)
     C = 4

@@ -93,6 +93,38 @@ def test_prototype_matches_semantics(svm_setup):
     assert np.all(srv.taus >= 2)
 
 
+def test_prototype_batched_fabric_matches_serial(svm_setup):
+    """The continuous-batched cluster (one client_update_many dispatch per
+    round) must match the literal per-client loop: identical tau
+    trajectories and wire accounting, params within f32 vmap-lowering
+    rounding (fed/prototype.py documents the last-ulp caveat)."""
+    from repro.fed.prototype import FedVecaClient, FedVecaServer
+
+    model, clients, _ = svm_setup
+    p = np.array([len(d) for d in clients], float)
+    p /= p.sum()
+    outs = {}
+    for batched in (False, True):  # batched last: `cs` checked below
+        cs = [FedVecaClient(i, model, d, batch_size=8, eta=0.05)
+              for i, d in enumerate(clients)]
+        srv = FedVecaServer(model, cs, p, eta=0.05, tau_max=6, batched=batched)
+        taus = []
+        for _ in range(4):
+            srv.round()
+            taus.append(srv.taus.copy())
+        outs[batched] = (taus, srv.bytes_sent, srv.bytes_recv,
+                         jax.tree.map(np.asarray, srv.params))
+    for a, b in zip(outs[True][0], outs[False][0]):
+        np.testing.assert_array_equal(a, b)
+    assert outs[True][1] == outs[False][1]
+    assert outs[True][2] == outs[False][2]
+    for k in outs[True][3]:
+        np.testing.assert_allclose(outs[True][3][k], outs[False][3][k],
+                                   atol=1e-6)
+    # the batched fabric must not have built any per-client engine
+    assert all(c._engine is None for c in cs)
+
+
 def test_checkpoint_roundtrip(tmp_path, svm_setup):
     from repro.checkpoint.io import restore, save
 
