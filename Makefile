@@ -1,11 +1,14 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test collect test-sharded ci smoke bench-round-engine \
-	bench-controller-driver bench-sharded
+.PHONY: test test-fast collect test-sharded ci smoke bench-round-engine \
+	bench-controller-driver bench-sharded bench-serve
 
 test:
 	python -m pytest -x -q
+
+test-fast:
+	python -m pytest -x -q -m "not slow"
 
 collect:
 	python -m pytest --collect-only -q
@@ -28,3 +31,6 @@ bench-controller-driver:
 
 bench-sharded:
 	python benchmarks/sharded_round.py
+
+bench-serve:
+	python benchmarks/serve_loop.py

@@ -26,6 +26,7 @@ from benchmarks import (  # noqa: E402
     kernels_micro,
     roofline,
     round_engine,
+    serve_loop,
     sharded_round,
 )
 from benchmarks.common import FULL, QUICK, emit  # noqa: E402
@@ -43,6 +44,7 @@ BENCHES = {
     "round_engine": round_engine.run,
     "controller_driver": controller_driver.run,
     "sharded_round": sharded_round.run,
+    "serve_loop": serve_loop.run,
 }
 
 

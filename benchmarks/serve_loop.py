@@ -1,0 +1,112 @@
+"""Continuous-batching serve benchmark (DESIGN.md §12): aggregate tok/s
+for ``serve.ServeLoop`` vs the request-at-a-time serial baseline under a
+mixed prompt-length Poisson trace.
+
+    PYTHONPATH=src python benchmarks/serve_loop.py [--smoke]
+    python -m benchmarks.run --only serve_loop
+    make bench-serve
+
+Both loops decode the SAME trace with greedy argmax (token streams are
+parity-tested in tests/test_serve_loop.py); the serial loop pays one
+dispatch per token per request, the serve loop amortizes every live
+request into one slot-masked decode_step per tick. Rows append to
+``experiments/serve_loop.jsonl``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.models.model import build_model_by_name  # noqa: E402
+from repro.serve import SerialLoop, ServeLoop, poisson_trace  # noqa: E402
+
+PLENS = (8, 16, 24, 32)
+MAX_NEWS = (8, 16, 24)
+CAPACITY = 128
+
+
+def _clone(reqs):
+    return [r.clone() for r in reqs]
+
+
+def bench_arch(arch: str, n_requests: int, n_slots: int, rate: float,
+               seed: int = 0):
+    model = build_model_by_name(arch, reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    trace = poisson_trace(n_requests, rate=rate, plen_choices=PLENS,
+                          max_new_choices=MAX_NEWS,
+                          vocab_size=model.config.vocab_size, seed=seed)
+
+    # warmup run compiles every program; the timed run reuses them
+    sloop = SerialLoop(model, params, capacity=CAPACITY)
+    sloop.run(_clone(trace))
+    serial = sloop.run(_clone(trace))
+
+    cloop = ServeLoop(model, params, n_slots=n_slots, capacity=CAPACITY)
+    cloop.run(_clone(trace))  # run() resets per trace; compiles are kept
+    loop = cloop.run(_clone(trace))
+    return serial, loop
+
+
+def run(scale=None, out_rows: list = None, csv_dir=None, *,
+        archs=("starcoder2-3b", "qwen1.5-32b"), n_requests=24, n_slots=8,
+        rate=2.0, json_path=None):
+    rows = out_rows if out_rows is not None else []
+    json_rows = []
+    for arch in archs:
+        serial, loop = bench_arch(arch, n_requests, n_slots, rate)
+        speedup = loop["tok_s"] / max(serial["tok_s"], 1e-9)
+        jrow = dict(
+            bench="serve_loop", arch=arch, n_requests=n_requests,
+            n_slots=n_slots, rate=rate, plens=list(PLENS),
+            max_news=list(MAX_NEWS),
+            serial_tok_s=round(serial["tok_s"], 2),
+            serial_dispatches=serial["decode_dispatches"],
+            loop_tok_s=round(loop["tok_s"], 2),
+            loop_dispatches=loop["decode_dispatches"],
+            tokens=loop["tokens"],
+            speedup=round(speedup, 3),
+        )
+        json_rows.append(jrow)
+        print(json.dumps(jrow))
+        rows.append(dict(
+            name=f"serve_loop/{arch}/slots{n_slots}",
+            us_per_call=1e6 / max(loop["tok_s"], 1e-9),
+            derived=(f"serial_tok_s={serial['tok_s']:.1f}|"
+                     f"loop_tok_s={loop['tok_s']:.1f}|"
+                     f"speedup={speedup:.2f}x"),
+        ))
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "a") as f:
+            for jrow in json_rows:
+                f.write(json.dumps(jrow) + "\n")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: one arch, few requests")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--json", default="experiments/serve_loop.jsonl")
+    args = ap.parse_args()
+    archs = ("starcoder2-3b",) if args.smoke else ("starcoder2-3b", "qwen1.5-32b")
+    n_requests = args.requests or (8 if args.smoke else 24)
+    run(archs=archs, n_requests=n_requests, n_slots=args.slots,
+        json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

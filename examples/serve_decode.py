@@ -1,62 +1,109 @@
-"""Serving demo: prefill a batch of prompts, then decode tokens with the
-KV-cache (ring buffer under sliding-window attention) — the same
-prefill/decode code paths the decode_32k / long_500k dry-run shapes lower.
+"""Serving demo: continuous-batching decode over a slot-managed KV cache.
 
-    PYTHONPATH=src python examples/serve_decode.py --arch starcoder2-3b --steps 16
+A mixed-length Poisson request trace flows through ``serve.ServeLoop`` —
+admission prefills each request into a free slot of ONE fixed-shape
+DecodeCache (masked per-slot insert, no recompiles), every tick runs a
+single slot-masked ``decode_step`` over all live requests, and EOS /
+max-len retirement frees slots for immediate reuse.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch starcoder2-3b
+    PYTHONPATH=src python examples/serve_decode.py --serial   # old loop
+    PYTHONPATH=src python examples/serve_decode.py --check    # parity
+
+``--serial`` keeps the old request-at-a-time loop (the parity oracle);
+``--check`` runs both and asserts token-for-token identical streams.
 """
 import argparse
-import time
+import sys
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import build_model_by_name
+from repro.serve import (
+    SerialLoop,
+    ServeLoop,
+    ServeUnsupportedError,
+    poisson_trace,
+)
+
+
+def clone(reqs):
+    return [r.clone() for r in reqs]
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="starcoder2-3b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8, help="B_slots")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=2.0, help="arrivals/tick")
+    ap.add_argument("--capacity", type=int, default=128,
+                    help="KV slots per cache row")
+    ap.add_argument("--max-new", type=int, default=16,
+                    help="largest per-request decode budget")
+    ap.add_argument("--cache-update", default="mask",
+                    choices=("mask", "scatter"))
+    ap.add_argument("--serial", action="store_true",
+                    help="old request-at-a-time loop")
+    ap.add_argument("--check", action="store_true",
+                    help="run BOTH loops and assert token parity")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     model = build_model_by_name(args.arch, reduced=True)  # CPU-sized
     cfg = model.config
+    try:  # fail fast + clearly (whisper: no decode path; vlm: no patches)
+        serve_loop = ServeLoop(model, params=None, n_slots=args.slots,
+                               capacity=args.capacity,
+                               cache_update=args.cache_update)
+    except ServeUnsupportedError as e:
+        print(f"serve_decode: {e}", file=sys.stderr)
+        sys.exit(2)
     params = model.init(jax.random.PRNGKey(0))
-    r = np.random.RandomState(0)
-    B, S = args.batch, args.prompt_len
-    prompts = jnp.asarray(r.randint(0, cfg.vocab_size, (B, S)), jnp.int32)
+    serve_loop.params = params
 
-    batch = {"tokens": prompts}
-    if cfg.family == "vlm":
-        batch["patches"] = jnp.asarray(
-            r.randn(B, cfg.num_patches, cfg.vision_dim), jnp.float32)
-    kw = {} if cfg.family == "ssm" else {"pad_to": S + args.steps}
-    prefill = jax.jit(lambda p, b: model.prefill(p, b, **kw))
-    decode = jax.jit(model.decode_step)
+    reqs = poisson_trace(
+        args.requests, rate=args.rate,
+        plen_choices=(8, 16, 24, 32),
+        max_new_choices=tuple(sorted({max(1, args.max_new // 4),
+                                      max(1, args.max_new // 2),
+                                      args.max_new})),
+        vocab_size=cfg.vocab_size, seed=args.seed,
+    )
+    if cfg.vision_dim:  # vlm requests carry their vision input
+        pr = np.random.RandomState(args.seed + 1)
+        for q in reqs:
+            q.patches = pr.randn(cfg.num_patches,
+                                 cfg.vision_dim).astype(np.float32)
+    print(f"{args.arch}: {len(reqs)} requests, plens "
+          f"{sorted({r.plen for r in reqs})}, window="
+          f"{cfg.sliding_window or 'full'}")
 
-    t0 = time.time()
-    logits, cache = prefill(params, batch)
-    jax.block_until_ready(logits)
-    print(f"prefill[{B}x{S}] in {time.time()-t0:.2f}s "
-          f"(window={cfg.sliding_window or 'full'})")
+    def run_loop(rs):
+        return serve_loop.run(rs)
 
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    out = [tok]
-    t0 = time.time()
-    for i in range(args.steps):
-        pos = jnp.full((B,), S + i, jnp.int32)
-        logits, cache = decode(params, cache, tok, pos)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    print(f"decoded {args.steps} steps x {B} seqs in {dt:.2f}s "
-          f"({args.steps*B/dt:.1f} tok/s on CPU)")
-    gen = jnp.stack(out, 1)
-    print("generated ids (first seq):", np.asarray(gen[0]))
+    def run_serial(rs):
+        return SerialLoop(model, params,
+                          cache_update=args.cache_update).run(rs)
+
+    if args.check:
+        a, b = clone(reqs), clone(reqs)
+        run_loop(a)
+        run_serial(b)
+        for ra, rb in zip(a, b):
+            assert ra.out == rb.out, (
+                f"request {ra.rid}: loop {ra.out} != serial {rb.out}")
+        print(f"PARITY OK: {len(a)} requests token-for-token identical")
+        return
+
+    stats = run_serial(reqs) if args.serial else run_loop(reqs)
+    mode = "serial" if args.serial else f"loop[slots={args.slots}]"
+    print(f"{mode}: {stats['tokens']} tokens in {stats['wall_s']:.2f}s "
+          f"({stats['tok_s']:.1f} tok/s, "
+          f"{stats['decode_dispatches']} decode dispatches, "
+          f"{stats['prefill_dispatches']} prefills)")
+    print("first request ids:", np.asarray(reqs[0].out))
 
 
 if __name__ == "__main__":

@@ -2,13 +2,22 @@
 # Tier-1 CI: the repo's own test suite + a real end-to-end smoke.
 #   scripts/ci.sh          # collect sanity + tests + quickstart + bench smokes
 #   scripts/ci.sh tests    # collect sanity + tests only
+#   scripts/ci.sh fast     # collect sanity + tests minus @slow (quick lane)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+MODE="${1:-all}"
 
 echo "== tier-1: pytest collect sanity =="
 python -m pytest --collect-only -q
+
+if [ "$MODE" = fast ]; then
+  echo "== tier-1 (fast lane): pytest -m 'not slow' =="
+  python -m pytest -x -q -m "not slow"
+  echo "CI OK (fast lane)"
+  exit 0
+fi
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q
@@ -19,12 +28,14 @@ echo "== multi-device: sharded round (8 forced host devices) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   python -m pytest -x -q tests/test_sharded_round.py
 
-if [ "${1:-all}" = "all" ]; then
+if [ "$MODE" = "all" ]; then
   echo "== smoke: examples/quickstart.py =="
   python examples/quickstart.py --rounds 3
   echo "== smoke: benchmarks/controller_driver.py =="
   python benchmarks/controller_driver.py --smoke
   echo "== smoke: benchmarks/sharded_round.py =="
   python benchmarks/sharded_round.py --smoke
+  echo "== smoke: benchmarks/serve_loop.py =="
+  python benchmarks/serve_loop.py --smoke
 fi
 echo "CI OK"

@@ -190,16 +190,20 @@ def init_kv_cache(cfg, batch: int, seq_len: int, window: int = 0):
 
 
 def decode_attention_block(cfg, p, x, cache: KVCache, pos, *, window: int = 0,
-                           cache_update: str = "scatter"):
+                           cache_update: str = "mask", active=None):
     """One-token decode. x [B,1,d], pos [B] absolute position of the token.
 
     Ring-buffer semantics: the new token's K/V lands in slot pos % W; the
     mask combines slot validity (pos >= 0), causality and the window.
 
-    cache_update: "scatter" (baseline .at[].set) or "mask" (one-hot
-    jnp.where — shardable in-place update; a batch-sharded cache scatter
-    with global row indices makes GSPMD all-gather the cache, see
-    EXPERIMENTS.md §Perf / qwen1.5-32b decode_32k).
+    cache_update: "mask" (one-hot jnp.where — shardable in-place update;
+    a batch-sharded cache scatter with global row indices makes GSPMD
+    all-gather the cache, see EXPERIMENTS.md §Perf / qwen1.5-32b
+    decode_32k) or "scatter" (baseline .at[].set).
+
+    active: optional bool [B] slot mask (serve/ continuous batching) —
+    rows with active=False keep their cache entries bit-identical (exact
+    no-op write); their attention output is garbage and must be ignored.
     """
     B = x.shape[0]
     q, k_new, v_new = _project_qkv(cfg, p, x, pos[:, None], cfg.rope)
@@ -207,14 +211,22 @@ def decode_attention_block(cfg, p, x, cache: KVCache, pos, *, window: int = 0,
     slot = (pos % W).astype(jnp.int32)
     if cache_update == "mask":
         sel = (jnp.arange(W, dtype=jnp.int32)[None, :] == slot[:, None])  # [B,W]
+        if active is not None:
+            sel &= active[:, None]
         k = jnp.where(sel[..., None, None], k_new, cache.k)
         v = jnp.where(sel[..., None, None], v_new, cache.v)
         kpos = jnp.where(sel, pos[:, None].astype(jnp.int32), cache.pos)
     else:
         bidx = jnp.arange(B)
-        k = cache.k.at[bidx, slot].set(k_new[:, 0])
-        v = cache.v.at[bidx, slot].set(v_new[:, 0])
-        kpos = cache.pos.at[bidx, slot].set(pos.astype(jnp.int32))
+        k_w, v_w = k_new[:, 0], v_new[:, 0]
+        p_w = pos.astype(jnp.int32)
+        if active is not None:
+            k_w = jnp.where(active[:, None, None], k_w, cache.k[bidx, slot])
+            v_w = jnp.where(active[:, None, None], v_w, cache.v[bidx, slot])
+            p_w = jnp.where(active, p_w, cache.pos[bidx, slot])
+        k = cache.k.at[bidx, slot].set(k_w)
+        v = cache.v.at[bidx, slot].set(v_w)
+        kpos = cache.pos.at[bidx, slot].set(p_w)
     new_cache = KVCache(k, v, kpos)
 
     G = cfg.num_heads // cfg.num_kv_heads
@@ -230,6 +242,23 @@ def decode_attention_block(cfg, p, x, cache: KVCache, pos, *, window: int = 0,
     o = jnp.einsum("bhgk,bkhd->bhgd", w.astype(v.dtype), v)
     o = o.reshape(B, 1, cfg.q_dim)
     return o @ p["w_o"], new_cache
+
+
+def insert_kv_slot(cache: KVCache, one: KVCache, slot) -> KVCache:
+    """Write a single request's cache (batch 1) into row `slot` of a B-row
+    cache via the masked update path (one-hot jnp.where, no scatter — the
+    same shardable in-place form as cache_update="mask", so a request can
+    join a mid-flight decode batch without recompiling or re-sharding).
+
+    cache leaves [B, W, ...]; one leaves [1, W, ...] with matching W.
+    """
+    B = cache.k.shape[0]
+    sel = jnp.arange(B, dtype=jnp.int32) == slot  # [B]
+    return KVCache(
+        k=jnp.where(sel[:, None, None, None], one.k, cache.k),
+        v=jnp.where(sel[:, None, None, None], one.v, cache.v),
+        pos=jnp.where(sel[:, None], one.pos, cache.pos),
+    )
 
 
 def prefill_kv_cache(cfg, p, x, positions, *, window: int = 0, pad_to: int = 0):

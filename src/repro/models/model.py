@@ -117,6 +117,24 @@ def build_model(cfg: ArchConfig) -> Model:
     )
 
 
+def decode_capability(model: Model) -> tuple[bool, str]:
+    """Whether this model can serve the decode path, with the reason if not.
+
+    The serve loop and examples/serve_decode.py gate on this instead of
+    crashing into a None decode_step (whisper) mid-run.
+    """
+    if model.decode_step is not None and model.init_cache is not None:
+        return True, ""
+    if model.config.family == "audio":
+        return False, (
+            f"{model.config.name}: whisper's decoder is 448-token encoder-"
+            "conditioned (needs `frames`, no decode_step/init_cache) — "
+            "decode serving n/a; use prefill/forward (DESIGN.md §5)")
+    return False, (
+        f"{model.config.name}: family={model.config.family!r} exposes no "
+        "decode path (decode_step/init_cache are None)")
+
+
 def build_model_by_name(name: str, reduced: bool = False) -> Model:
     from repro.configs import get_arch
 

@@ -55,8 +55,17 @@ def _expert_ffn(cfg, p, xb):
     return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
 
 
-def moe_apply(cfg, p, x):
-    """x [B, S, d] -> (y [B, S, d], aux_loss scalar)."""
+def moe_apply(cfg, p, x, token_mask=None):
+    """x [B, S, d] -> (y [B, S, d], aux_loss scalar).
+
+    token_mask: optional bool [B, S] (serve/ slot-masked decode). Masked
+    tokens are sorted BEHIND live tokens within each expert's capacity run
+    and never write a bucket row, so a masked token can never displace a
+    live one. NOTE `cap` is still computed from the full (padded) token
+    count T, so when an expert overflows among LIVE tokens the keep/drop
+    cut is looser than a live-only batch would apply — the batch-
+    composition caveat documented on transformer.prefill / ServeLoop.
+    """
     B, S, d = x.shape
     T = B * S
     E = cfg.num_experts + cfg.num_experts_pad  # pad experts are never routed
@@ -82,12 +91,22 @@ def moe_apply(cfg, p, x):
     e_flat = expert_idx.reshape(-1)  # [T*k]
     g_flat = gate_vals.reshape(-1)
     t_flat = jnp.arange(T * k, dtype=jnp.int32) // k  # owning token
-    order = jnp.argsort(e_flat)  # stable
+    if token_mask is not None:
+        live_k = jnp.repeat(token_mask.reshape(T), k)  # [T*k]
+        # composite key: within each expert, live tokens keep their relative
+        # order ahead of masked ones -> a live token's pos_s equals its rank
+        # among live tokens only (argsort is stable)
+        order = jnp.argsort(e_flat * 2 + (1 - live_k.astype(e_flat.dtype)))
+    else:
+        live_k = None
+        order = jnp.argsort(e_flat)  # stable
     e_s, g_s, t_s = e_flat[order], g_flat[order], t_flat[order]
     counts = jnp.zeros((E,), jnp.int32).at[e_flat].add(1)
     starts = jnp.cumsum(counts) - counts
     pos_s = jnp.arange(T * k, dtype=jnp.int32) - starts[e_s]
     keep = pos_s < cap
+    if live_k is not None:
+        keep &= live_k[order]
     pos_c = jnp.where(keep, pos_s, 0)
 
     buckets = jnp.zeros((E, cap, d), x.dtype)

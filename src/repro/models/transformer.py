@@ -250,9 +250,21 @@ def init_cache(cfg, batch: int, seq_len: int, window: int = 0) -> DecodeCache:
     return DecodeCache(kv=kv, ssm=ssm_st, xlstm_m=xm, xlstm_s=xs)
 
 
+def _row_select(active, new, old):
+    """Per-batch-row select: new where active else old. Batch axis leads."""
+    B = active.shape[0]
+    return jnp.where(active.reshape((B,) + (1,) * (new.ndim - 1)), new, old)
+
+
 def decode_step(cfg, p, cache: DecodeCache, token, pos, window: int = 0, unroll=1,
-                cache_update: str = "scatter"):
-    """token [B] int32, pos [B] int32 -> (logits [B, V], new cache)."""
+                cache_update: str = "mask", active=None):
+    """token [B] int32, pos [B] int32 -> (logits [B, V], new cache).
+
+    active: optional bool [B] slot mask (serve/ continuous batching) —
+    inactive rows leave EVERY cache leaf (KV, SSM state, xLSTM state)
+    bit-identical and, for MoE layers, never compete for expert capacity;
+    their logits are garbage and must be ignored by the caller.
+    """
     B = token.shape[0]
     h = p["embed"][token][:, None].astype(jnp.dtype(cfg.compute_dtype))  # [B,1,d]
     if cfg.learned_pos:
@@ -260,6 +272,11 @@ def decode_step(cfg, p, cache: DecodeCache, token, pos, window: int = 0, unroll=
 
     if cfg.family == "ssm":
         h, xm, xs = _xlstm_decode(cfg, p["xlstm"], h, cache, unroll=unroll)
+        if active is not None:  # batch axis is 2: [n_super, n_per, B, ...]
+            sel = lambda n, o: jnp.where(  # noqa: E731
+                active.reshape((1, 1, B) + (1,) * (n.ndim - 3)), n, o)
+            xm = jax.tree.map(sel, xm, cache.xlstm_m)
+            xs = jax.tree.map(sel, xs, cache.xlstm_s)
         logits = unembed(cfg, p, h)[:, 0]
         return logits, DecodeCache(None, None, xm, xs)
 
@@ -270,16 +287,21 @@ def decode_step(cfg, p, cache: DecodeCache, token, pos, window: int = 0, unroll=
         lp, kv_l, ssm_l = xs_
         hn = apply_norm(cfg, lp["norm1"], h)
         a_out, kv_new = attn.decode_attention_block(cfg, lp["attn"], hn, kv_l, pos,
-                                                     window=W, cache_update=cache_update)
+                                                     window=W, cache_update=cache_update,
+                                                     active=active)
         new_ssm = ssm_l
         if cfg.hybrid_parallel_ssm:
             s_out, new_ssm = ssm_mod.ssm_apply(cfg, lp["ssm"], hn, ssm_l)
+            if active is not None:
+                new_ssm = jax.tree.map(
+                    lambda n, o: _row_select(active, n, o), new_ssm, ssm_l)
             h = h + _hybrid_fuse(cfg, lp, a_out, s_out)
         else:
             h = h + a_out
         hn2 = apply_norm(cfg, lp["norm2"], h)
         if cfg.is_moe:
-            y, _ = moe_mod.moe_apply(cfg, lp["moe"], hn2)
+            tm = None if active is None else active[:, None]
+            y, _ = moe_mod.moe_apply(cfg, lp["moe"], hn2, token_mask=tm)
             h = h + y
         elif cfg.d_ff:
             h = h + mlp_apply(cfg, lp["mlp"], hn2)
@@ -289,6 +311,32 @@ def decode_step(cfg, p, cache: DecodeCache, token, pos, window: int = 0, unroll=
                                    unroll=unroll)
     logits = unembed(cfg, p, h)[:, 0]
     return logits, DecodeCache(kv=kv, ssm=ssm_st, xlstm_m=None, xlstm_s=None)
+
+
+def insert_cache_slot(cache: DecodeCache, one: DecodeCache, slot) -> DecodeCache:
+    """Write one request's DecodeCache (batch 1) into row `slot` of a
+    B-slot cache — the serve/ admission path. Every leaf goes through the
+    masked update (attn.insert_kv_slot / one-hot jnp.where), so admission
+    composes with any sharding of the big cache and never recompiles.
+    """
+
+    def sel_at(axis):
+        def f(old, new):
+            B = old.shape[axis]
+            sel = (jnp.arange(B, dtype=jnp.int32) == slot).reshape(
+                (1,) * axis + (B,) + (1,) * (old.ndim - axis - 1))
+            return jnp.where(sel, new, old)
+        return f
+
+    kv = ssm_st = xm = xs = None
+    if cache.kv is not None:
+        kv = jax.vmap(lambda c, o: attn.insert_kv_slot(c, o, slot))(cache.kv, one.kv)
+    if cache.ssm is not None:  # [L, B, ...]
+        ssm_st = jax.tree.map(lambda o, n: sel_at(1)(o, n), cache.ssm, one.ssm)
+    if cache.xlstm_m is not None:  # [n_super, n_per, B, ...]
+        xm = jax.tree.map(lambda o, n: sel_at(2)(o, n), cache.xlstm_m, one.xlstm_m)
+        xs = jax.tree.map(lambda o, n: sel_at(2)(o, n), cache.xlstm_s, one.xlstm_s)
+    return DecodeCache(kv=kv, ssm=ssm_st, xlstm_m=xm, xlstm_s=xs)
 
 
 def _xlstm_decode(cfg, xp, h, cache: DecodeCache, unroll=1):
@@ -319,15 +367,40 @@ def _xlstm_decode(cfg, xp, h, cache: DecodeCache, unroll=1):
     return h, xm, xs
 
 
-def prefill(cfg, p, batch, impl="auto", window: int = 0, pad_to: int = 0, unroll=1):
+def prefill(cfg, p, batch, impl="auto", window: int = 0, pad_to: int = 0, unroll=1,
+            length=None):
     """Full-prompt forward; returns (last-token logits [B,V], DecodeCache).
 
     `pad_to`: full-attention cache capacity (room for decoded tokens).
+
+    `length`: optional int32 [B] true prompt lengths — tokens at positions
+    >= length[b] are right-padding (serve/ prompt buckets): the returned
+    logits come from position length[b]-1 and padded cache slots are
+    invalidated (pos=-1). Causal masking makes this bit-identical to an
+    exact-length prefill for dense layers; MoE layers route pad tokens
+    BEHIND live ones (token_mask), so padding never displaces a live
+    token — but the expert capacity is computed from the PADDED token
+    count, so a live token the exact-length run would DROP on overflow
+    can survive here (inherent to static Switch/GShard capacity). Only
+    valid for pure KV-cache families: recurrent state (SSM / hybrid /
+    xLSTM) absorbs padded tokens and cannot be masked after the fact.
     """
+    if length is not None and (cfg.family == "ssm" or cfg.hybrid_parallel_ssm):
+        raise ValueError(
+            "prefill(length=) needs a KV-only cache; recurrent families "
+            "must prefill at the exact prompt length")
+    if length is not None and (window or cfg.sliding_window):
+        raise ValueError(
+            "prefill(length=) is full-attention only: the ring buffer keeps "
+            "the last `window` slots of the PADDED prompt, dropping live "
+            "tokens — prefill SWA models at the exact prompt length")
     h = embed_tokens(cfg, p, batch)
     B, S = h.shape[:2]
     positions = jnp.arange(S)
     W = window or cfg.sliding_window
+    # pad tokens must not compete for MoE expert capacity (their garbage
+    # activations would displace live tokens from the dispatch buckets)
+    live = None if length is None else (positions[None, :] < length[:, None])
 
     if cfg.family == "ssm":
         # run the stack step-free but capture final recurrent states
@@ -349,7 +422,7 @@ def prefill(cfg, p, batch, impl="auto", window: int = 0, pad_to: int = 0, unroll
             h = h + a_out
         hn2 = apply_norm(cfg, lp["norm2"], h)
         if cfg.is_moe:
-            y, _ = moe_mod.moe_apply(cfg, lp["moe"], hn2)
+            y, _ = moe_mod.moe_apply(cfg, lp["moe"], hn2, token_mask=live)
             h = h + y
         elif cfg.d_ff:
             h = h + mlp_apply(cfg, lp["mlp"], hn2)
@@ -357,7 +430,13 @@ def prefill(cfg, p, batch, impl="auto", window: int = 0, pad_to: int = 0, unroll
 
     h, (kv, ssm_st) = jax.lax.scan(jax.checkpoint(body), h, p["layers"],
                                    unroll=unroll)
-    logits = unembed(cfg, p, h)[:, -1]
+    if length is None:
+        logits = unembed(cfg, p, h)[:, -1]
+    else:
+        last = jnp.take_along_axis(
+            h, (length - 1).astype(jnp.int32)[:, None, None], axis=1)  # [B,1,d]
+        logits = unembed(cfg, p, last)[:, 0]
+        kv = kv._replace(pos=jnp.where(kv.pos < length[None, :, None], kv.pos, -1))
     return logits, DecodeCache(kv=kv, ssm=ssm_st, xlstm_m=None, xlstm_s=None)
 
 

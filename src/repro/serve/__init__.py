@@ -1,0 +1,28 @@
+"""Continuous-batching decode serving (DESIGN.md §12).
+
+Public surface:
+  * ``Request`` / ``RequestQueue`` / ``SlotTable`` — host-side slot table;
+  * ``ServeLoop`` — admission + slot-masked decode_step + retirement;
+  * ``serial_generate`` — the request-at-a-time parity oracle;
+  * ``poisson_trace`` — mixed-length synthetic request traces;
+  * ``ServeUnsupportedError`` — raised for models with no decode path.
+"""
+from repro.serve.loop import (
+    SerialLoop,
+    ServeLoop,
+    ServeUnsupportedError,
+    serial_generate,
+)
+from repro.serve.slots import Request, RequestQueue, SlotTable
+from repro.serve.trace import poisson_trace
+
+__all__ = [
+    "Request",
+    "RequestQueue",
+    "SerialLoop",
+    "ServeLoop",
+    "ServeUnsupportedError",
+    "SlotTable",
+    "poisson_trace",
+    "serial_generate",
+]

@@ -1,0 +1,300 @@
+"""Continuous-batching decode: ServeLoop over a slot-managed DecodeCache.
+
+One fixed-shape ``decode_step`` program serves any mix of in-flight
+requests (DESIGN.md §12):
+
+  * the cache is ONE ``DecodeCache`` of ``n_slots`` rows with ``capacity``
+    KV slots each (ring of `window` for SWA models) — never reallocated;
+  * admission prefills a single request (batch 1, prompt padded to a
+    length bucket for full-attention models) and writes its cache row in
+    place via the masked-update path (``insert_cache_slot``), so a request
+    joins a mid-flight batch without recompiling the decode program;
+  * per-slot pos/active vectors make retired and never-filled slots exact
+    device no-ops — the same masked-padding trick as the masked-tau scan
+    in ``core/engine.client_update_many``;
+  * EOS / max-len retirement frees the slot for the next tick's admission
+    (the stale row stays on device; active=False masks it exactly).
+
+Greedy token streams are parity-tested token-for-token against
+``serial_generate`` (the old request-at-a-time loop) in
+tests/test_serve_loop.py.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# CPU backends that predate donation support ignore the hint; scoped filter
+# so the warning doesn't fire once per serve dispatch
+from repro.core.engine import _quiet_donation
+from repro.models.model import Model, decode_capability
+from repro.models.transformer import insert_cache_slot
+from repro.serve.slots import Request, RequestQueue, SlotTable
+
+
+class ServeUnsupportedError(RuntimeError):
+    """Model has no decode path (e.g. whisper) — carries the reason."""
+
+
+def _check_servable(model: Model):
+    """decode_capability as a raise-with-reason gate."""
+    ok, why = decode_capability(model)
+    if not ok:
+        raise ServeUnsupportedError(why)
+
+
+def _request_batch(cfg, req: Request, tokens) -> dict:
+    """Prefill inputs for one request; vlm prompts MUST carry patches —
+    serving them text-only would silently ignore the vision input."""
+    if cfg.vision_dim:
+        if req.patches is None:
+            raise ServeUnsupportedError(
+                f"{cfg.name}: request {req.rid} has no `patches`; vlm "
+                "prompts need the vision input alongside tokens "
+                "(Request.patches)")
+        if req.plen < cfg.num_patches:
+            # embed_tokens only splices patches in when they fit inside
+            # the prompt (num_patches <= seq len); a shorter prompt would
+            # silently drop the image — and bucket padding would make the
+            # batched and serial loops disagree about whether it fired
+            raise ServeUnsupportedError(
+                f"{cfg.name}: request {req.rid} prompt ({req.plen} tokens) "
+                f"is shorter than num_patches={cfg.num_patches}; the image "
+                "would be silently dropped")
+    batch = {"tokens": tokens}
+    if req.patches is not None:
+        batch["patches"] = jnp.asarray(req.patches, jnp.float32)[None]
+    return batch
+
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+class ServeLoop:
+    """Continuous-batching driver: admission + one decode_step per tick.
+
+    Args:
+      model, params: any Model with a decode path (decode_capability).
+      n_slots: device batch rows (B_slots). Throughput scales with the
+        number of simultaneously live rows; the decode program shape is
+        fixed at [n_slots] forever.
+      capacity: KV slots per row — must cover max(plen + max_new) over the
+        requests this loop will ever see (SWA models use their ring of
+        `window` slots instead and ignore larger capacities).
+      bucket: prompt-length rounding for full-attention prefill (one
+        compile per distinct bucket, not per distinct prompt length).
+        Recurrent (SSM/hybrid/xLSTM) and SWA models must prefill at the
+        exact prompt length (state absorbs padding / the ring drops live
+        tokens), so they retrace per distinct plen instead.
+      cache_update: "mask" (default; shardable) or "scatter".
+
+    Parity note: token streams match SerialLoop bit-for-bit for dense /
+    SWA / recurrent families. MoE capacity dropping is batch-composition
+    dependent by construction (Switch/GShard static cap over the live
+    batch), so a live MoE request's stream can diverge from its
+    single-request run exactly when experts overflow — retired/empty
+    slots still never influence anyone (tested).
+    """
+
+    def __init__(self, model: Model, params, *, n_slots: int = 8,
+                 capacity: int = 256, bucket: int = 16,
+                 cache_update: str = "mask", unroll: int = 1):
+        _check_servable(model)
+        cfg = model.config
+        self.model, self.params, self.cfg = model, params, cfg
+        self.n_slots, self.capacity, self.bucket = n_slots, capacity, bucket
+        self.cache_update = cache_update
+        # exact-length prefill families: recurrent state absorbs padded
+        # tokens; the SWA ring keeps the last W slots of the PADDED prompt
+        self.exact_prefill = bool(cfg.sliding_window) \
+            or cfg.family == "ssm" or cfg.hybrid_parallel_ssm
+
+        self.reset()
+
+        def _decode(p, cache, tok, pos, active):
+            logits, new_cache = model.decode_step(
+                p, cache, tok, pos, unroll=unroll,
+                cache_update=cache_update, active=active)
+            return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+        self._insert = jax.jit(insert_cache_slot, donate_argnums=(0,))
+
+        exact = self.exact_prefill
+        pkw = {} if cfg.family == "ssm" else {"pad_to": capacity}
+
+        def _prefill_step(p, batch, length):
+            lkw = dict(pkw)
+            if not exact:
+                lkw["length"] = length
+            logits, cache = model.prefill(p, batch, **lkw)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        # one jit: its own shape cache gives one compile per prompt bucket
+        self._prefill_jit = jax.jit(_prefill_step)
+
+    def reset(self):
+        """Fresh slot table + cache; compiled programs are kept (reusing a
+        loop across traces never recompiles)."""
+        self.cache = self.model.init_cache(self.n_slots, self.capacity)
+        self.table = SlotTable(self.n_slots)
+        self.t = 0
+        self.decode_dispatches = 0
+        self.prefill_dispatches = 0
+
+    # -- admission prefill ---------------------------------------------------
+    def _prefill(self, req: Request):
+        plen = req.plen
+        if plen + req.max_new - 1 > self.capacity and not self.cfg.sliding_window:
+            raise ValueError(
+                f"request {req.rid}: plen {plen} + max_new {req.max_new} "
+                f"exceeds cache capacity {self.capacity}")
+        padded = plen if self.exact_prefill else \
+            min(_round_up(plen, self.bucket), self.capacity)
+        toks = np.zeros((1, padded), np.int32)
+        toks[0, :plen] = req.tokens
+        batch = _request_batch(self.cfg, req, jnp.asarray(toks))
+        first, one = self._prefill_jit(
+            self.params, batch, jnp.full((1,), plen, jnp.int32))
+        self.prefill_dispatches += 1
+        return int(first[0]), one
+
+    # -- one tick ------------------------------------------------------------
+    def tick(self, queue: RequestQueue):
+        """Admit into free slots, run one decode_step, retire finished."""
+        table = self.table
+        # 1. admission: fill free slots from the arrived queue; prefill
+        #    writes the slot's cache row in place (masked insert)
+        for slot in table.free_slots():
+            req = queue.pop_arrived(self.t)
+            if req is None:
+                break
+            first, one = self._prefill(req)
+            with _quiet_donation():
+                self.cache = self._insert(self.cache, one, jnp.int32(slot))
+            table.admit(slot, req, first, self.t)
+            if req.finished():  # max_new == 1 or instant EOS
+                table.retire(slot, self.t)
+
+        # 2. one decode dispatch over every live slot
+        if table.any_active():
+            with _quiet_donation():
+                nxt, self.cache = self._decode(
+                    self.params, self.cache,
+                    jnp.asarray(table.last_tok), jnp.asarray(table.pos),
+                    jnp.asarray(table.active),
+                )
+            self.decode_dispatches += 1
+            nxt_np = np.asarray(nxt)
+            # 3. readback + retirement (freed slots admit next tick)
+            for slot in table.live_slots():
+                table.append(slot, int(nxt_np[slot]))
+                if table.req[slot].finished():
+                    table.retire(slot, self.t)
+        self.t += 1
+
+    def run(self, requests: Sequence[Request]) -> Dict:
+        """Drive every request to completion; returns per-run stats.
+
+        Starts from a fresh slot table / tick clock (reset()), so stats
+        and arrival ticks are per-trace; compiled programs are reused.
+        """
+        self.reset()
+        queue = RequestQueue(requests)
+        t0 = time.time()
+        while len(queue) or self.table.any_active():
+            self.tick(queue)
+        jax.block_until_ready(self.cache)
+        wall = time.time() - t0
+        toks = sum(len(r.out) for r in requests)
+        return dict(
+            wall_s=wall,
+            ticks=self.t,
+            tokens=toks,
+            tok_s=toks / max(wall, 1e-9),
+            decode_dispatches=self.decode_dispatches,
+            prefill_dispatches=self.prefill_dispatches,
+        )
+
+
+# ---------------------------------------------------------------------------
+# request-at-a-time baseline (the pre-serve examples/serve_decode.py loop)
+# ---------------------------------------------------------------------------
+
+
+class SerialLoop:
+    """One request at a time: prefill [1, plen], then greedy decode_step
+    with batch 1 until EOS/max_new. The parity oracle for ServeLoop —
+    token streams must match token-for-token (greedy argmax).
+
+    `capacity`: fixed KV capacity shared by every request (one decode
+    compile, one prefill compile per distinct plen); None sizes each
+    request's cache exactly (retraces per (plen, max_new) pair — the old
+    examples/serve_decode.py behavior).
+    """
+
+    def __init__(self, model: Model, params, *, capacity: int = None,
+                 cache_update: str = "mask", unroll: int = 1):
+        _check_servable(model)
+        cfg = model.config
+        self.model, self.params, self.cfg = model, params, cfg
+        self.capacity = capacity
+
+        def _decode(p, cache, tok, pos):
+            logits, new_cache = model.decode_step(
+                p, cache, tok, pos, unroll=unroll, cache_update=cache_update)
+            return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+
+        self._decode = jax.jit(_decode)
+
+        @functools.lru_cache(maxsize=None)
+        def _prefill_fn(cap: int):
+            kw = {} if cfg.family == "ssm" else {"pad_to": cap}
+            return jax.jit(lambda p, b: model.prefill(p, b, **kw))
+
+        self._prefill_fn = _prefill_fn
+
+    def run(self, requests: Sequence[Request]) -> Dict:
+        t0 = time.time()
+        steps = 0
+        for req in requests:
+            cap = self.capacity or (req.plen + req.max_new - 1)
+            if req.plen + req.max_new - 1 > cap and not self.cfg.sliding_window:
+                # pos % W would wrap the full-attention cache and silently
+                # overwrite live prompt KV
+                raise ValueError(
+                    f"request {req.rid}: plen {req.plen} + max_new "
+                    f"{req.max_new} exceeds cache capacity {cap}")
+            batch = _request_batch(self.cfg, req,
+                                   jnp.asarray(req.tokens[None, :]))
+            logits, cache = self._prefill_fn(cap)(self.params, batch)
+            req.out.append(int(jnp.argmax(logits, -1)[0]))
+            pos = req.plen
+            while not req.finished():
+                tok, cache = self._decode(
+                    self.params, cache,
+                    jnp.asarray(req.out[-1:], jnp.int32),
+                    jnp.full((1,), pos, jnp.int32),
+                )
+                req.out.append(int(tok[0]))
+                pos += 1
+                steps += 1
+        wall = time.time() - t0
+        toks = sum(len(r.out) for r in requests)
+        return dict(wall_s=wall, ticks=steps, tokens=toks,
+                    tok_s=toks / max(wall, 1e-9), decode_dispatches=steps,
+                    prefill_dispatches=len(requests))
+
+
+def serial_generate(model: Model, params, requests: Sequence[Request], *,
+                    capacity: int = None, cache_update: str = "mask",
+                    unroll: int = 1) -> Dict:
+    """Convenience wrapper: build a SerialLoop and drive `requests`."""
+    return SerialLoop(model, params, capacity=capacity,
+                      cache_update=cache_update, unroll=unroll).run(requests)

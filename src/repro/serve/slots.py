@@ -1,0 +1,131 @@
+"""Host-side bookkeeping for the continuous-batching serve loop.
+
+The device side is a fixed-capacity slot table: one sharded DecodeCache of
+``n_slots`` rows plus per-slot pos/active vectors. This module tracks the
+host mirror of that state — which request owns which slot, what its next
+absolute position is, and which rows are live — so every ServeLoop tick
+can assemble the (token, pos, active) vectors for one ``decode_step``
+dispatch without touching device memory.
+
+Mirrors the masked-tau scan in ``core/engine.client_update_many``: a
+retired or never-filled slot is an exact device no-op, so one static-shape
+program absorbs any mix of request lengths (DESIGN.md §12).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: ragged prompt + stop conditions."""
+
+    rid: int
+    tokens: np.ndarray  # [plen] int32 prompt ids
+    max_new: int  # retire after this many generated tokens
+    eos_id: Optional[int] = None  # retire early on this id (optional)
+    arrival: int = 0  # tick at which the request becomes admissible
+    patches: Optional[np.ndarray] = None  # [num_patches, vision_dim]
+    #   vision input — REQUIRED for vlm models (serving them text-only
+    #   would silently ignore the image)
+
+    # filled in by the loop
+    out: List[int] = dataclasses.field(default_factory=list)
+    admit_tick: Optional[int] = None
+    done_tick: Optional[int] = None
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
+        if self.tokens.size == 0:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new < 1:
+            raise ValueError(f"request {self.rid}: max_new must be >= 1")
+
+    @property
+    def plen(self) -> int:
+        return int(self.tokens.size)
+
+    def clone(self) -> "Request":
+        """Fresh un-run copy (own token buffer, empty out/tick fields) —
+        for replaying one trace through several loops (parity, warmup)."""
+        return Request(self.rid, self.tokens.copy(), self.max_new,
+                       self.eos_id, self.arrival,
+                       None if self.patches is None else self.patches.copy())
+
+    def finished(self) -> bool:
+        if len(self.out) >= self.max_new:
+            return True
+        return self.eos_id is not None and len(self.out) > 0 \
+            and self.out[-1] == self.eos_id
+
+
+class RequestQueue:
+    """Arrival-ordered queue; requests become visible at their tick."""
+
+    def __init__(self, requests):
+        self._pending = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def pop_arrived(self, tick: int) -> Optional[Request]:
+        if self._pending and self._pending[0].arrival <= tick:
+            return self._pending.popleft()
+        return None
+
+
+class SlotTable:
+    """Host mirror of the device slot table: ``n_slots`` rows.
+
+    ``pos[s]`` is the absolute position the NEXT decoded token of slot s
+    will occupy; ``active[s]`` mirrors the device-side mask (False rows are
+    exact no-ops in decode_step); ``last_tok[s]`` is the token fed into the
+    next decode dispatch.
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("need n_slots >= 1")
+        self.n_slots = n_slots
+        self.req: List[Optional[Request]] = [None] * n_slots
+        self.pos = np.zeros(n_slots, np.int32)
+        self.active = np.zeros(n_slots, bool)
+        self.last_tok = np.zeros(n_slots, np.int32)
+
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.n_slots) if not self.active[s]]
+
+    def live_slots(self) -> List[int]:
+        return [s for s in range(self.n_slots) if self.active[s]]
+
+    def any_active(self) -> bool:
+        return bool(self.active.any())
+
+    def admit(self, slot: int, req: Request, first_tok: int, tick: int):
+        """Bind `req` to `slot` with its prefill-produced first token."""
+        assert not self.active[slot], f"slot {slot} is live"
+        req.admit_tick = tick
+        req.out.append(int(first_tok))
+        self.req[slot] = req
+        self.pos[slot] = req.plen  # the first generated token's position
+        self.active[slot] = True
+        self.last_tok[slot] = int(first_tok)
+
+    def append(self, slot: int, tok: int):
+        """Record one decoded token for a live slot."""
+        self.req[slot].out.append(int(tok))
+        self.pos[slot] += 1
+        self.last_tok[slot] = int(tok)
+
+    def retire(self, slot: int, tick: int) -> Request:
+        """Free the slot (reusable by the next admission — the device row
+        is left in place; active=False makes it an exact no-op)."""
+        req = self.req[slot]
+        req.done_tick = tick
+        self.req[slot] = None
+        self.active[slot] = False
+        return req

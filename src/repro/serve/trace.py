@@ -1,0 +1,46 @@
+"""Synthetic request traces for the serve loop (benchmarks + tests).
+
+A trace is a list of ``Request`` with Poisson arrivals (exponential
+inter-arrival gaps, measured in loop ticks) and mixed prompt/decode
+lengths — the ragged-workload regime continuous batching exists for.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.serve.slots import Request
+
+
+def poisson_trace(
+    n_requests: int,
+    *,
+    rate: float = 2.0,  # mean arrivals per tick
+    plen_choices: Sequence[int] = (8, 16, 24, 32),
+    max_new_choices: Sequence[int] = (4, 8, 12),
+    vocab_size: int = 256,
+    eos_id: Optional[int] = None,
+    seed: int = 0,
+) -> list:
+    """Mixed-length Poisson request trace.
+
+    Prompt lengths are drawn from ``plen_choices`` (a small set, so
+    bucketed/exact prefill compiles a bounded number of programs), decode
+    budgets from ``max_new_choices``; arrival ticks are the cumulative sum
+    of Exp(rate) gaps, floored to ints.
+    """
+    r = np.random.RandomState(seed)
+    gaps = r.exponential(1.0 / max(rate, 1e-9), n_requests)
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(r.choice(plen_choices))
+        reqs.append(Request(
+            rid=i,
+            tokens=r.randint(0, vocab_size, plen).astype(np.int32),
+            max_new=int(r.choice(max_new_choices)),
+            eos_id=eos_id,
+            arrival=int(arrivals[i]),
+        ))
+    return reqs

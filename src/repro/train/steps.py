@@ -204,6 +204,48 @@ def make_decode_bundle(model, mesh: Mesh, shape: ShapeConfig, *, unroll: int = 1
     return StepBundle(jit_fn, make_inputs, "decode_step")
 
 
+def make_slot_decode_bundle(model, mesh: Mesh, shape: ShapeConfig, *, unroll: int = 1,
+                            cache_update: str = "mask",
+                            kv_seq_shard: bool = True) -> StepBundle:
+    """Slot-masked decode variant (serve/ continuous batching): adds the
+    [B] active mask so retired / never-filled slots are exact cache no-ops
+    — one fixed-shape program absorbs any mix of live requests, mirroring
+    the masked-tau scan in core/engine.client_update_many."""
+    cfg: ArchConfig = model.config
+    B = shape.global_batch
+
+    def step(params, cache, token, pos, active):
+        with logical_axis_rules(mesh):
+            return model.decode_step(params, cache, token, pos, unroll=unroll,
+                                     cache_update=cache_update, active=active)
+
+    pstruct = params_struct(model)
+    pshard = _ns(mesh, param_specs(pstruct, mesh))
+    cstruct = jax.eval_shape(lambda: model.init_cache(B, shape.seq_len))
+    cshard = _ns(mesh, cache_specs(cstruct, mesh, kv_seq_shard=kv_seq_shard))
+    bspec = batch_specs(
+        dict(token=jax.ShapeDtypeStruct((B,), jnp.int32)), mesh
+    )["token"]
+    tshard = NamedSharding(mesh, bspec)
+    jit_fn = jax.jit(
+        step,
+        in_shardings=(pshard, cshard, tshard, tshard, tshard),
+        out_shardings=(None, cshard),
+        donate_argnums=(1,),
+    )
+
+    def make_inputs():
+        return (
+            pstruct,
+            cstruct,
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.bool_),
+        )
+
+    return StepBundle(jit_fn, make_inputs, "decode_step[slots]")
+
+
 def build_bundle(model, mesh: Mesh, shape: ShapeConfig, *, kind: Optional[str] = None,
                  **kw) -> StepBundle:
     kind = kind or shape.kind
@@ -218,7 +260,9 @@ def build_bundle(model, mesh: Mesh, shape: ShapeConfig, *, kind: Optional[str] =
     if kind == "decode":
         # defaults flipped post-§Perf: mask update + length-sharded cache
         # (1600x collective reduction on qwen1.5-32b decode_32k)
-        return make_decode_bundle(model, mesh, shape, unroll=kw.get("unroll", 1),
-                                  cache_update=kw.get("cache_update", "mask"),
-                                  kv_seq_shard=kw.get("kv_seq_shard", True))
+        maker = make_slot_decode_bundle if kw.pop("slot_masked", False) \
+            else make_decode_bundle
+        return maker(model, mesh, shape, unroll=kw.get("unroll", 1),
+                     cache_update=kw.get("cache_update", "mask"),
+                     kv_seq_shard=kw.get("kv_seq_shard", True))
     raise ValueError(kind)

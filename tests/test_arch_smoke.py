@@ -52,6 +52,7 @@ def test_train_step_updates_params(arch):
     assert any(jax.tree.leaves(changed))
 
 
+@pytest.mark.slow  # ~20s; the round step is pinned cheaply in test_round_engine
 @pytest.mark.parametrize("arch", ["starcoder2-3b", "granite-moe-1b-a400m", "xlstm-1.3b"])
 def test_fedveca_round_on_arch(arch):
     """The paper's round step runs on LM families, not just toys."""

@@ -75,6 +75,49 @@ def test_ring_buffer_decode_forgets_old_tokens():
     )
 
 
+def test_ring_wraparound_scatter_mask_and_full_reference_agree():
+    """Decode well past `window` (two wraparounds): the scatter and mask
+    cache updates stay bit-identical at EVERY step, and both match a
+    full-recompute attention reference (forward over the whole prefix) at
+    checkpoints — starting from a prefill with S > W, which exercises the
+    roll-based ring layout (shift = S % W) in prefill_kv_cache."""
+    import dataclasses
+
+    from repro.configs import get_arch
+    from repro.models.model import build_model
+
+    W = 16
+    cfg = dataclasses.replace(get_arch("starcoder2-3b").reduced(),
+                              sliding_window=W)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    r = np.random.RandomState(7)
+    S = W + 5  # prefill ring roll shift = S % W = 5
+    steps = 2 * W + 3  # decode through two full ring wraparounds
+    toks = r.randint(0, 100, (1, S + steps)).astype(np.int32)
+
+    _, c_sc = model.prefill(params, {"tokens": jnp.asarray(toks[:, :S])})
+    c_mk = c_sc
+    decode = {
+        u: jax.jit(lambda p, c, t, q, _u=u: model.decode_step(
+            p, c, t, q, cache_update=_u)) for u in ("scatter", "mask")
+    }
+    checkpoints = {S, S + W, S + steps - 1}  # first step / after wrap / last
+    for t in range(S, S + steps):
+        tok = jnp.asarray(toks[:, t])
+        pos = jnp.full((1,), t, jnp.int32)
+        l_sc, c_sc = decode["scatter"](params, c_sc, tok, pos)
+        l_mk, c_mk = decode["mask"](params, c_mk, tok, pos)
+        np.testing.assert_array_equal(np.asarray(l_sc), np.asarray(l_mk))
+        for a, b in zip(jax.tree.leaves(c_sc), jax.tree.leaves(c_mk)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        if t in checkpoints:  # full recompute over the whole prefix
+            full, _ = model.forward(params, {"tokens": jnp.asarray(toks[:, : t + 1])})
+            np.testing.assert_allclose(
+                np.asarray(l_sc), np.asarray(full[:, -1]), atol=5e-4,
+                err_msg=f"step {t}")
+
+
 def test_moe_aux_loss_increases_with_imbalance():
     """Routing all tokens identically must score a higher balance penalty
     than near-uniform routing (GShard aux-loss sanity)."""
