@@ -2,7 +2,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test test-fast collect test-sharded ci smoke bench-round-engine \
-	bench-controller-driver bench-sharded bench-serve
+	bench-controller-driver bench-sharded bench-serve bench-serve-paged
 
 test:
 	python -m pytest -x -q
@@ -34,3 +34,6 @@ bench-sharded:
 
 bench-serve:
 	python benchmarks/serve_loop.py
+
+bench-serve-paged:
+	python benchmarks/serve_paged.py

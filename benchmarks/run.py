@@ -27,6 +27,7 @@ from benchmarks import (  # noqa: E402
     roofline,
     round_engine,
     serve_loop,
+    serve_paged,
     sharded_round,
 )
 from benchmarks.common import FULL, QUICK, emit  # noqa: E402
@@ -45,6 +46,7 @@ BENCHES = {
     "controller_driver": controller_driver.run,
     "sharded_round": sharded_round.run,
     "serve_loop": serve_loop.run,
+    "serve_paged": serve_paged.run,
 }
 
 

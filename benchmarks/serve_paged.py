@@ -1,0 +1,155 @@
+"""Paged-KV serve benchmark (DESIGN.md §12): aggregate tok/s for
+``serve.PagedServeLoop`` vs the contiguous ``ServeLoop`` at an EQUAL
+KV-memory budget on the mixed prompt-length Poisson trace.
+
+    PYTHONPATH=src python benchmarks/serve_paged.py [--smoke]
+    python -m benchmarks.run --only serve_paged
+    make bench-serve-paged
+
+The contiguous loop reserves worst-case rows for EVERY slot (`capacity`,
+or the SWA ring of `window`), so a fixed row budget caps its slot count
+at ``budget // per_slot_rows``. The paged loop shares the same rows as a
+page pool and each request holds only ``ceil(min(plen + max_new - 1, W)
+/ page_size)`` pages, so the same budget carries ~3x more live slots.
+Each arch runs a TIGHT and a GENEROUS budget point: the win is largest
+when memory (not compute) bounds concurrency — the regime paged KV
+exists for; at generous budgets the CPU host's per-row decode cost grows
+linearly with live slots and eats the dispatch savings (documented in
+DESIGN.md §12 — on real accelerators decode is bandwidth-bound and the
+extra rows ride along). SWA archs (starcoder2) start from a compact
+`window`-row ring, so their pooling headroom is only W / avg_rows.
+
+Greedy streams are asserted identical between both loops on every run
+(the parity bar; per-token parity vs SerialLoop is pinned in
+tests/test_serve_paged.py). Rows append to
+``experiments/serve_paged.jsonl``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.models.model import build_model_by_name  # noqa: E402
+from repro.serve import PagedServeLoop, ServeLoop, poisson_trace  # noqa: E402
+
+PLENS = (8, 16, 24, 32)
+MAX_NEWS = (8, 16, 24)
+CAPACITY = 128  # contiguous per-slot reservation (full-attention archs)
+PAGE_SIZE = 8
+RATE = 4.0
+
+# (contig_slots, paged_slots) budget points per arch: tight first (the
+# memory-bound regime paged KV targets), then a generous one
+BUDGETS = {
+    "qwen1.5-32b": ((1, 4), (4, 12)),
+    "starcoder2-3b": ((2, 3), (4, 8)),
+}
+
+
+def _clone(reqs):
+    return [r.clone() for r in reqs]
+
+
+def bench_point(model, params, trace, contig_slots: int, paged_slots: int):
+    """One equal-budget comparison; returns (contig, paged, budget_rows)."""
+    W = model.config.sliding_window
+    per_slot_rows = W if W else CAPACITY
+    budget_rows = contig_slots * per_slot_rows
+    n_pages = budget_rows // PAGE_SIZE
+
+    cloop = ServeLoop(model, params, n_slots=contig_slots, capacity=CAPACITY)
+    cloop.run(_clone(trace))  # warmup compiles; run() resets per trace
+    c_reqs = _clone(trace)
+    contig = cloop.run(c_reqs)
+
+    ploop = PagedServeLoop(model, params, n_slots=paged_slots,
+                           capacity=CAPACITY, page_size=PAGE_SIZE,
+                           n_pages=n_pages)
+    ploop.run(_clone(trace))
+    p_reqs = _clone(trace)
+    paged = ploop.run(p_reqs)
+
+    # parity bar: pooled pages must not change a single greedy token
+    for qc, qp in zip(c_reqs, p_reqs):
+        assert qc.out == qp.out, (
+            f"request {qc.rid}: paged {qp.out} != contiguous {qc.out}")
+    return contig, paged, budget_rows
+
+
+def run(scale=None, out_rows: list = None, csv_dir=None, *,
+        archs=("starcoder2-3b", "qwen1.5-32b"), n_requests=24, rate=RATE,
+        json_path=None):
+    rows = out_rows if out_rows is not None else []
+    json_rows = []
+    for arch in archs:
+        model = build_model_by_name(arch, reduced=True)
+        params = model.init(jax.random.PRNGKey(0))
+        trace = poisson_trace(n_requests, rate=rate, plen_choices=PLENS,
+                              max_new_choices=MAX_NEWS,
+                              vocab_size=model.config.vocab_size, seed=0)
+        for contig_slots, paged_slots in BUDGETS[arch]:
+            contig, paged, budget_rows = bench_point(
+                model, params, trace, contig_slots, paged_slots)
+            speedup = paged["tok_s"] / max(contig["tok_s"], 1e-9)
+            jrow = dict(
+                bench="serve_paged", arch=arch, n_requests=n_requests,
+                rate=rate, plens=list(PLENS), max_news=list(MAX_NEWS),
+                kv_rows_budget=budget_rows, page_size=PAGE_SIZE,
+                contig_slots=contig_slots, paged_slots=paged_slots,
+                n_pages=paged["n_pages"], peak_pages=paged["peak_pages"],
+                contig_tok_s=round(contig["tok_s"], 2),
+                contig_dispatches=contig["decode_dispatches"],
+                paged_tok_s=round(paged["tok_s"], 2),
+                paged_dispatches=paged["decode_dispatches"],
+                tokens=paged["tokens"],
+                parity="ok",
+                speedup=round(speedup, 3),
+            )
+            json_rows.append(jrow)
+            print(json.dumps(jrow))
+            rows.append(dict(
+                name=f"serve_paged/{arch}/rows{budget_rows}",
+                us_per_call=1e6 / max(paged["tok_s"], 1e-9),
+                derived=(f"contig_tok_s={contig['tok_s']:.1f}|"
+                         f"paged_tok_s={paged['tok_s']:.1f}|"
+                         f"slots={contig_slots}->{paged_slots}|"
+                         f"speedup={speedup:.2f}x"),
+            ))
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "a") as f:
+            for jrow in json_rows:
+                f.write(json.dumps(jrow) + "\n")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: one arch, one tight budget point, few "
+                    "requests — still exercises allocation, backpressure, "
+                    "page reuse and the parity assert end to end")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--json", default="experiments/serve_paged.jsonl")
+    args = ap.parse_args()
+    if args.smoke:
+        global BUDGETS
+        BUDGETS = {"qwen1.5-32b": ((1, 4),)}
+        run(archs=("qwen1.5-32b",), n_requests=args.requests or 8,
+            json_path=None)
+        return
+    run(n_requests=args.requests or 24, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,9 +9,15 @@ max-len retirement frees slots for immediate reuse.
     PYTHONPATH=src python examples/serve_decode.py --arch starcoder2-3b
     PYTHONPATH=src python examples/serve_decode.py --serial   # old loop
     PYTHONPATH=src python examples/serve_decode.py --check    # parity
+    PYTHONPATH=src python examples/serve_decode.py --paged --pages 16
+    PYTHONPATH=src python examples/serve_decode.py --temperature 0.8 --top-k 20
 
 ``--serial`` keeps the old request-at-a-time loop (the parity oracle);
-``--check`` runs both and asserts token-for-token identical streams.
+``--check`` runs both and asserts token-for-token identical streams;
+``--paged`` pools per-slot KV capacity into a shared page table
+(``--pages`` bounds the pool — admission backpressures when exhausted);
+``--temperature``/``--top-k`` sample instead of greedy argmax
+(temperature 0 IS greedy, bit-identical).
 """
 import argparse
 import sys
@@ -21,6 +27,8 @@ import numpy as np
 
 from repro.models.model import build_model_by_name
 from repro.serve import (
+    PagedServeLoop,
+    SamplerConfig,
     SerialLoop,
     ServeLoop,
     ServeUnsupportedError,
@@ -48,15 +56,37 @@ def main():
                     help="old request-at-a-time loop")
     ap.add_argument("--check", action="store_true",
                     help="run BOTH loops and assert token parity")
+    ap.add_argument("--paged", action="store_true",
+                    help="pooled-page KV cache (PagedServeLoop)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV rows per page (--paged)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="pool size in pages (--paged; default = the "
+                    "contiguous worst case, fewer pages = backpressure)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy, bit-identical)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k sampling cutoff (0 = full vocab)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    sampler = SamplerConfig(temperature=args.temperature, top_k=args.top_k,
+                            seed=args.seed)
     model = build_model_by_name(args.arch, reduced=True)  # CPU-sized
     cfg = model.config
-    try:  # fail fast + clearly (whisper: no decode path; vlm: no patches)
-        serve_loop = ServeLoop(model, params=None, n_slots=args.slots,
-                               capacity=args.capacity,
-                               cache_update=args.cache_update)
+    try:  # fail fast + clearly (whisper: no decode path; vlm: no patches;
+        # xlstm: no KV to page)
+        if args.paged:
+            serve_loop = PagedServeLoop(
+                model, params=None, n_slots=args.slots,
+                capacity=args.capacity, page_size=args.page_size,
+                n_pages=args.pages, cache_update=args.cache_update,
+                sampler=sampler)
+        else:
+            serve_loop = ServeLoop(model, params=None, n_slots=args.slots,
+                                   capacity=args.capacity,
+                                   cache_update=args.cache_update,
+                                   sampler=sampler)
     except ServeUnsupportedError as e:
         print(f"serve_decode: {e}", file=sys.stderr)
         sys.exit(2)
@@ -84,8 +114,8 @@ def main():
         return serve_loop.run(rs)
 
     def run_serial(rs):
-        return SerialLoop(model, params,
-                          cache_update=args.cache_update).run(rs)
+        return SerialLoop(model, params, cache_update=args.cache_update,
+                          sampler=sampler).run(rs)
 
     if args.check:
         a, b = clone(reqs), clone(reqs)
@@ -98,11 +128,15 @@ def main():
         return
 
     stats = run_serial(reqs) if args.serial else run_loop(reqs)
-    mode = "serial" if args.serial else f"loop[slots={args.slots}]"
+    mode = "serial" if args.serial else \
+        ("paged" if args.paged else "loop") + f"[slots={args.slots}]"
     print(f"{mode}: {stats['tokens']} tokens in {stats['wall_s']:.2f}s "
           f"({stats['tok_s']:.1f} tok/s, "
           f"{stats['decode_dispatches']} decode dispatches, "
           f"{stats['prefill_dispatches']} prefills)")
+    if args.paged and not args.serial:
+        print(f"pool: {stats['peak_pages']}/{stats['n_pages']} peak pages "
+              f"of {stats['page_size']} rows")
     print("first request ids:", np.asarray(reqs[0].out))
 
 

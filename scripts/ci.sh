@@ -15,6 +15,10 @@ python -m pytest --collect-only -q
 if [ "$MODE" = fast ]; then
   echo "== tier-1 (fast lane): pytest -m 'not slow' =="
   python -m pytest -x -q -m "not slow"
+  echo "== smoke: benchmarks/serve_paged.py (paged-parity) =="
+  # exercises the page allocator + backpressure + reuse end to end and
+  # asserts paged==contiguous greedy streams on every CI run
+  python benchmarks/serve_paged.py --smoke
   echo "CI OK (fast lane)"
   exit 0
 fi
@@ -37,5 +41,7 @@ if [ "$MODE" = "all" ]; then
   python benchmarks/sharded_round.py --smoke
   echo "== smoke: benchmarks/serve_loop.py =="
   python benchmarks/serve_loop.py --smoke
+  echo "== smoke: benchmarks/serve_paged.py =="
+  python benchmarks/serve_paged.py --smoke
 fi
 echo "CI OK"

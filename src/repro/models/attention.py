@@ -261,6 +261,154 @@ def insert_kv_slot(cache: KVCache, one: KVCache, slot) -> KVCache:
     )
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache (decode; DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+class PagedKVPool(NamedTuple):
+    """Shared KV page pool: ``n_pages`` pages of ``page_size`` rows each.
+
+    Unlike :class:`KVCache` there is NO stored per-entry position: slot
+    validity is purely arithmetic (entry ``i`` of a slot holds absolute
+    position ``i`` for full attention, or the ring position
+    ``pos - ((pos - i) mod W)`` under SWA), computed in
+    :func:`paged_decode_attention_block` from the page table and the
+    slot's current ``pos``.  A freed-and-reallocated page therefore can
+    never leak a previous request's validity metadata — stale K/V rows
+    are masked (exact-zero attention weight) until the new owner
+    overwrites them.
+    """
+
+    k: jax.Array  # [N, page_size, Hkv, hd]
+    v: jax.Array  # [N, page_size, Hkv, hd]
+
+
+def init_paged_kv_pool(cfg, n_pages: int, page_size: int) -> PagedKVPool:
+    dt = jnp.dtype(cfg.param_dtype)
+    shape = (n_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    return PagedKVPool(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt))
+
+
+def paged_slot_valid(page_table, pos, page_size: int, window: int):
+    """Arithmetic KV validity: page_table [B, P] (-1 = unallocated),
+    pos [B] -> bool [B, P*page_size] (True = attend).
+
+    Full attention (window=0): entry ``i`` holds position ``i``; valid iff
+    ``i <= pos`` and its page is allocated. SWA ring (modulus ``window``):
+    entry ``i < W`` holds ``p_i = pos - ((pos - i) mod W)``; valid iff
+    ``p_i >= 0`` (the ring construction already bounds ``p_i`` to
+    ``(pos - W, pos]``). Identical to the stored-kpos mask of
+    :func:`decode_attention_block` for every entry a live slot has
+    actually written; never-written / stale entries come out invalid.
+    """
+    B, P = page_table.shape
+    cap = P * page_size
+    i = jnp.arange(cap, dtype=jnp.int32)[None, :]  # [1, cap]
+    alloc = jnp.repeat(page_table >= 0, page_size, axis=1)  # [B, cap]
+    posb = pos[:, None].astype(jnp.int32)
+    if window:
+        p_i = posb - ((posb - i) % window)
+        return alloc & (i < window) & (p_i >= 0)
+    return alloc & (i <= posb)
+
+
+def paged_decode_attention_block(cfg, p, x, pool: PagedKVPool, page_table,
+                                 pos, *, window: int = 0,
+                                 cache_update: str = "mask", active=None):
+    """One-token decode against the shared page pool. x [B,1,d], pos [B].
+
+    Write: the token's K/V lands in physical page ``page_table[b, idx //
+    page_size]`` row ``idx % page_size`` (idx = pos, or pos % W for SWA
+    rings). ``cache_update="mask"`` uses a one-hot masked update over the
+    pool — the shardable in-place form, but its selector spans the WHOLE
+    pool per batch row (B x n_pages x page_size), which is the paged
+    loop's extra per-tick cost at generous pool sizes; "scatter" writes
+    ``pool.at[phys, row]`` directly (masked rows route to an out-of-
+    bounds index and are dropped; pages are slot-exclusive so live
+    writes never collide) —
+    cheaper unsharded, same bits. A slot whose target page is unallocated
+    (-1) drops the write either way (the host allocator guarantees live
+    slots always have their page).
+
+    Read: gather the slot's pages into [B, P*page_size, ...] and run the
+    identical masked-softmax as :func:`decode_attention_block`, with
+    validity from :func:`paged_slot_valid`. Masked entries contribute
+    EXACT zeros (NEG_INF logit -> 0 weight -> 0 * finite), so greedy
+    streams are bit-identical to the contiguous cache whenever the
+    logical capacities match.
+
+    active: optional bool [B] slot mask — inactive rows never write and
+    their outputs are garbage the caller must ignore.
+    """
+    B = x.shape[0]
+    N, ps, Hkv, hd = pool.k.shape
+    P = page_table.shape[1]
+    q, k_new, v_new = _project_qkv(cfg, p, x, pos[:, None], cfg.rope)
+
+    idx = ((pos % window) if window else pos).astype(jnp.int32)
+    phys = jnp.take_along_axis(page_table, (idx // ps)[:, None], axis=1)[:, 0]
+    if cache_update == "mask":
+        sel = (jnp.arange(N, dtype=jnp.int32)[None, :] == phys[:, None])[:, :, None] \
+            & (jnp.arange(ps, dtype=jnp.int32)[None, None, :] == (idx % ps)[:, None, None])
+        if active is not None:
+            sel &= active[:, None, None]
+        # pages are slot-exclusive: the sum over B has at most one non-zero
+        # term per (page, row), so the write is exact (1.0 * k_new + zeros)
+        selv = sel.astype(k_new.dtype)
+        k_pool = jnp.where(sel.any(0)[..., None, None],
+                           jnp.einsum("bnr,bhd->nrhd", selv, k_new[:, 0]), pool.k)
+        v_pool = jnp.where(sel.any(0)[..., None, None],
+                           jnp.einsum("bnr,bhd->nrhd", selv, v_new[:, 0]), pool.v)
+    else:
+        ok = phys >= 0
+        if active is not None:
+            ok &= active
+        phys_w = jnp.where(ok, phys, N)  # N is out of bounds -> dropped
+        k_pool = pool.k.at[phys_w, idx % ps].set(k_new[:, 0], mode="drop")
+        v_pool = pool.v.at[phys_w, idx % ps].set(v_new[:, 0], mode="drop")
+    new_pool = PagedKVPool(k_pool, v_pool)
+
+    safe_pt = jnp.maximum(page_table, 0)
+    k = k_pool[safe_pt].reshape(B, P * ps, Hkv, hd)
+    v = v_pool[safe_pt].reshape(B, P * ps, Hkv, hd)
+    valid = paged_slot_valid(page_table, pos, ps, window)
+
+    G = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(B, cfg.num_kv_heads, G, cfg.head_dim)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32)
+    logits *= 1.0 / math.sqrt(cfg.head_dim)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", w.astype(v.dtype), v)
+    o = o.reshape(B, 1, cfg.q_dim)
+    return o @ p["w_o"], new_pool
+
+
+def insert_kv_pages(pool: PagedKVPool, one: KVCache, page_ids) -> PagedKVPool:
+    """Write a batch-1 prefill cache into pool pages ``page_ids`` [P]
+    (int32, -1 = unallocated -> skipped); slot page ``j`` gets rows
+    ``[j*page_size, (j+1)*page_size)`` of ``one``. ``one.k`` [1, cap, ...]
+    with cap == P * page_size (pad the prefill cache up to a page multiple
+    first). Every ALLOCATED page is written IN FULL, so page reuse can
+    never leak a previous request's K/V into the new owner's valid range
+    (poisoning guard #1; the arithmetic validity mask of
+    :func:`paged_decode_attention_block` is guard #2).
+    """
+    N, ps, Hkv, hd = pool.k.shape
+    P = page_ids.shape[0]
+    src_k = one.k[0].reshape(P, ps, Hkv, hd)
+    src_v = one.v[0].reshape(P, ps, Hkv, hd)
+    sel = (page_ids[:, None] == jnp.arange(N, dtype=jnp.int32)[None, :]) \
+        & (page_ids >= 0)[:, None]  # [P, N]; page ids are distinct
+    selv = sel.astype(src_k.dtype)
+    hit = sel.any(0)[:, None, None, None]  # [N,1,1,1]
+    return PagedKVPool(
+        k=jnp.where(hit, jnp.einsum("pn,prhd->nrhd", selv, src_k), pool.k),
+        v=jnp.where(hit, jnp.einsum("pn,prhd->nrhd", selv, src_v), pool.v),
+    )
+
+
 def prefill_kv_cache(cfg, p, x, positions, *, window: int = 0, pad_to: int = 0):
     """Compute K/V for a full prompt and lay them into a (ring) cache.
 

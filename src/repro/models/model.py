@@ -32,6 +32,9 @@ class Model(NamedTuple):
     decode_step: Optional[Callable]
     init_cache: Optional[Callable]
     input_specs: Callable
+    # paged-KV decode path (DESIGN.md §12; None for toy/audio families)
+    paged_decode_step: Optional[Callable] = None
+    init_paged_cache: Optional[Callable] = None
 
 
 def _lm_input_specs(cfg: ArchConfig, shape: ShapeConfig, *, per_device_batch=None):
@@ -114,6 +117,8 @@ def build_model(cfg: ArchConfig) -> Model:
         decode_step=functools.partial(transformer.decode_step, cfg),
         init_cache=functools.partial(transformer.init_cache, cfg),
         input_specs=functools.partial(_lm_input_specs, cfg),
+        paged_decode_step=functools.partial(transformer.paged_decode_step, cfg),
+        init_paged_cache=functools.partial(transformer.init_paged_cache, cfg),
     )
 
 

@@ -313,6 +313,131 @@ def decode_step(cfg, p, cache: DecodeCache, token, pos, window: int = 0, unroll=
     return logits, DecodeCache(kv=kv, ssm=ssm_st, xlstm_m=None, xlstm_s=None)
 
 
+# ---------------------------------------------------------------------------
+# paged KV decode (DESIGN.md §12): pooled pages + per-slot page table
+# ---------------------------------------------------------------------------
+
+
+class PagedDecodeCache(NamedTuple):
+    """Pooled-capacity decode cache: KV pages are shared across slots.
+
+    ``kv`` is a :class:`attn.PagedKVPool` with leaves stacked [L, n_pages,
+    page_size, Hkv, hd] — ONE page id addresses the same page in every
+    layer, so the (host-owned) page table is shared across layers and
+    passed per dispatch, not stored here. Hybrid models keep their O(1)
+    per-slot SSM state rows dense ([L, n_slots, ...]) — recurrent state
+    has nothing to page.
+    """
+
+    kv: Optional[attn.PagedKVPool]  # leaves stacked [L, ...]
+    ssm: Optional[ssm_mod.SSMState]  # hybrid only, stacked [L, n_slots, ...]
+
+
+def init_paged_cache(cfg, n_slots: int, n_pages: int,
+                     page_size: int) -> PagedDecodeCache:
+    """Shared pool of ``n_pages * page_size`` KV rows for ``n_slots`` slots.
+
+    Recurrent-only families (xLSTM) have no KV to page — use the
+    contiguous :func:`init_cache` / :func:`decode_step` path for them.
+    """
+    if cfg.family == "ssm":
+        raise ValueError(
+            f"{cfg.name}: family='ssm' keeps O(1) recurrent state per slot "
+            "— there is no KV cache to page; use init_cache/decode_step")
+    one = attn.init_paged_kv_pool(cfg, n_pages, page_size)
+    kv = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), one)
+    ssm_st = None
+    if cfg.hybrid_parallel_ssm:
+        st = ssm_mod.init_ssm_state(cfg, n_slots, cfg.d_model,
+                                    dtype=cfg.param_dtype)
+        ssm_st = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), st)
+    return PagedDecodeCache(kv=kv, ssm=ssm_st)
+
+
+def paged_decode_step(cfg, p, cache: PagedDecodeCache, page_table, token, pos,
+                      window: int = 0, unroll=1, cache_update: str = "mask",
+                      active=None):
+    """token [B], pos [B], page_table [B, P] int32 -> (logits [B, V],
+    new cache). The paged sibling of :func:`decode_step`: same layer scan,
+    same masked no-op guarantees for inactive rows (KV write, SSM state,
+    MoE capacity), but KV lives in the shared page pool and each slot's
+    cache is reached through its page-table row.
+    """
+    B = token.shape[0]
+    h = p["embed"][token][:, None].astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.learned_pos:
+        h = h + p["pos_embed"][pos][:, None].astype(h.dtype)
+
+    W = window or cfg.sliding_window
+
+    def body(carry, xs_):
+        h = carry
+        lp, kv_l, ssm_l = xs_
+        hn = apply_norm(cfg, lp["norm1"], h)
+        a_out, kv_new = attn.paged_decode_attention_block(
+            cfg, lp["attn"], hn, kv_l, page_table, pos, window=W,
+            cache_update=cache_update, active=active)
+        new_ssm = ssm_l
+        if cfg.hybrid_parallel_ssm:
+            s_out, new_ssm = ssm_mod.ssm_apply(cfg, lp["ssm"], hn, ssm_l)
+            if active is not None:
+                new_ssm = jax.tree.map(
+                    lambda n, o: _row_select(active, n, o), new_ssm, ssm_l)
+            h = h + _hybrid_fuse(cfg, lp, a_out, s_out)
+        else:
+            h = h + a_out
+        hn2 = apply_norm(cfg, lp["norm2"], h)
+        if cfg.is_moe:
+            tm = None if active is None else active[:, None]
+            y, _ = moe_mod.moe_apply(cfg, lp["moe"], hn2, token_mask=tm)
+            h = h + y
+        elif cfg.d_ff:
+            h = h + mlp_apply(cfg, lp["mlp"], hn2)
+        return h, (kv_new, new_ssm)
+
+    h, (kv, ssm_st) = jax.lax.scan(body, h, (p["layers"], cache.kv, cache.ssm),
+                                   unroll=unroll)
+    logits = unembed(cfg, p, h)[:, 0]
+    return logits, PagedDecodeCache(kv=kv, ssm=ssm_st)
+
+
+def insert_cache_pages(cache: PagedDecodeCache, one: DecodeCache, slot,
+                       page_ids) -> PagedDecodeCache:
+    """Page-granular admission: write one request's prefill cache (batch 1)
+    into its allocated pool pages ``page_ids`` [P] (-1 = unallocated,
+    skipped) and — for hybrid models — its SSM state into row ``slot``.
+    The prefill cache is zero-padded up to P * page_size rows so every
+    allocated page is overwritten in full (see attn.insert_kv_pages).
+    """
+    N, ps = cache.kv.k.shape[1], cache.kv.k.shape[2]
+    P = page_ids.shape[0]
+    cap, have = P * ps, one.kv.k.shape[2]
+    one_kv = one.kv
+    if have < cap:  # SWA ring of W rows with W not a page multiple
+        one_kv = attn.KVCache(
+            k=jnp.pad(one_kv.k, ((0, 0), (0, 0), (0, cap - have), (0, 0), (0, 0))),
+            v=jnp.pad(one_kv.v, ((0, 0), (0, 0), (0, cap - have), (0, 0), (0, 0))),
+            pos=one_kv.pos,
+        )
+    kv = jax.vmap(lambda pool, o: attn.insert_kv_pages(pool, o, page_ids))(
+        attn.PagedKVPool(cache.kv.k, cache.kv.v),
+        attn.KVCache(one_kv.k, one_kv.v, jnp.zeros((one_kv.k.shape[0], 1, cap),
+                                                   jnp.int32)))
+    ssm_st = None
+    if cache.ssm is not None:  # [L, B, ...]
+        B = jax.tree.leaves(cache.ssm)[0].shape[1]
+        sel = (jnp.arange(B, dtype=jnp.int32) == slot)
+
+        def write(old, new):
+            s = sel.reshape((1, B) + (1,) * (old.ndim - 2))
+            return jnp.where(s, new, old)
+
+        ssm_st = jax.tree.map(write, cache.ssm, one.ssm)
+    return PagedDecodeCache(kv=kv, ssm=ssm_st)
+
+
 def insert_cache_slot(cache: DecodeCache, one: DecodeCache, slot) -> DecodeCache:
     """Write one request's DecodeCache (batch 1) into row `slot` of a
     B-slot cache — the serve/ admission path. Every leaf goes through the

@@ -2,23 +2,39 @@
 
 Public surface:
   * ``Request`` / ``RequestQueue`` / ``SlotTable`` — host-side slot table;
+  * ``PageAllocator`` — free-list over the shared KV page pool;
   * ``ServeLoop`` — admission + slot-masked decode_step + retirement;
+  * ``PagedServeLoop`` — pooled-page KV variant (per-slot page tables,
+    admission backpressure when the pool is exhausted);
+  * ``SamplerConfig`` — temperature/top-k sampled decode with per-request
+    fold_in streams (temperature=0 == greedy, bit-identical);
   * ``serial_generate`` — the request-at-a-time parity oracle;
   * ``poisson_trace`` — mixed-length synthetic request traces;
   * ``ServeUnsupportedError`` — raised for models with no decode path.
 """
 from repro.serve.loop import (
+    PagedServeLoop,
     SerialLoop,
     ServeLoop,
     ServeUnsupportedError,
     serial_generate,
 )
-from repro.serve.slots import Request, RequestQueue, SlotTable
+from repro.serve.sampling import GREEDY, SamplerConfig
+from repro.serve.slots import (
+    PageAllocator,
+    Request,
+    RequestQueue,
+    SlotTable,
+)
 from repro.serve.trace import poisson_trace
 
 __all__ = [
+    "GREEDY",
+    "PageAllocator",
+    "PagedServeLoop",
     "Request",
     "RequestQueue",
+    "SamplerConfig",
     "SerialLoop",
     "ServeLoop",
     "ServeUnsupportedError",

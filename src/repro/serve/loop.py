@@ -12,18 +12,30 @@ requests (DESIGN.md §12):
   * per-slot pos/active vectors make retired and never-filled slots exact
     device no-ops — the same masked-padding trick as the masked-tau scan
     in ``core/engine.client_update_many``;
-  * EOS / max-len retirement frees the slot for the next tick's admission
-    (the stale row stays on device; active=False masks it exactly).
+  * each tick runs admit -> decode -> retire -> admit again, so a slot
+    freed by retirement (or by an instant-finishing admit) is re-filled
+    within the SAME tick instead of idling until the next one;
+  * EOS / max-len retirement frees the slot (the stale row stays on
+    device; active=False masks it exactly); an oversized request is
+    recorded as failed on the ``Request`` and the trace keeps serving.
+
+``PagedServeLoop`` swaps the per-slot worst-case rows for a shared page
+pool (``n_pages`` x ``page_size`` KV rows) with per-slot page tables —
+short requests hold only the pages they need, so ``n_slots`` can grow at
+the same memory budget; admission backpressures (queues, doesn't crash)
+while the pool is exhausted. Both loops take a ``SamplerConfig`` for
+temperature/top-k sampling with per-request ``fold_in`` streams;
+``temperature=0`` is bit-identical to greedy argmax.
 
 Greedy token streams are parity-tested token-for-token against
 ``serial_generate`` (the old request-at-a-time loop) in
-tests/test_serve_loop.py.
+tests/test_serve_loop.py and tests/test_serve_paged.py.
 """
 from __future__ import annotations
 
 import functools
 import time
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,8 +45,9 @@ import numpy as np
 # so the warning doesn't fire once per serve dispatch
 from repro.core.engine import _quiet_donation
 from repro.models.model import Model, decode_capability
-from repro.models.transformer import insert_cache_slot
-from repro.serve.slots import Request, RequestQueue, SlotTable
+from repro.models.transformer import insert_cache_pages, insert_cache_slot
+from repro.serve.sampling import GREEDY, SamplerConfig, make_sample_fn
+from repro.serve.slots import PageAllocator, Request, RequestQueue, SlotTable
 
 
 class ServeUnsupportedError(RuntimeError):
@@ -86,13 +99,19 @@ class ServeLoop:
         fixed at [n_slots] forever.
       capacity: KV slots per row — must cover max(plen + max_new) over the
         requests this loop will ever see (SWA models use their ring of
-        `window` slots instead and ignore larger capacities).
+        `window` slots instead and ignore larger capacities). A request
+        that doesn't fit is REJECTED (``Request.failed`` + run() stats),
+        not a trace-killing exception.
       bucket: prompt-length rounding for full-attention prefill (one
         compile per distinct bucket, not per distinct prompt length).
         Recurrent (SSM/hybrid/xLSTM) and SWA models must prefill at the
         exact prompt length (state absorbs padding / the ring drops live
         tokens), so they retrace per distinct plen instead.
       cache_update: "mask" (default; shardable) or "scatter".
+      sampler: SamplerConfig — temperature/top-k sampling with per-request
+        fold_in(rid)/fold_in(nstep) streams (sample streams never depend
+        on slot or batch composition). Default GREEDY; temperature=0 is
+        bit-identical to greedy argmax.
 
     Parity note: token streams match SerialLoop bit-for-bit for dense /
     SWA / recurrent families. MoE capacity dropping is batch-composition
@@ -104,100 +123,169 @@ class ServeLoop:
 
     def __init__(self, model: Model, params, *, n_slots: int = 8,
                  capacity: int = 256, bucket: int = 16,
-                 cache_update: str = "mask", unroll: int = 1):
+                 cache_update: str = "mask", unroll: int = 1,
+                 sampler: Optional[SamplerConfig] = None):
         _check_servable(model)
         cfg = model.config
         self.model, self.params, self.cfg = model, params, cfg
         self.n_slots, self.capacity, self.bucket = n_slots, capacity, bucket
         self.cache_update = cache_update
+        self.sampler = sampler or GREEDY
+        self._sample = make_sample_fn(self.sampler)
         # exact-length prefill families: recurrent state absorbs padded
         # tokens; the SWA ring keeps the last W slots of the PADDED prompt
         self.exact_prefill = bool(cfg.sliding_window) \
             or cfg.family == "ssm" or cfg.hybrid_parallel_ssm
 
+        self._build_programs(model, unroll)
         self.reset()
 
-        def _decode(p, cache, tok, pos, active):
+    # -- compiled programs (PagedServeLoop overrides) ------------------------
+    def _build_programs(self, model, unroll):
+        sample, cache_update = self._sample, self.cache_update
+
+        def _decode(p, cache, tok, pos, active, rid, nstep):
             logits, new_cache = model.decode_step(
                 p, cache, tok, pos, unroll=unroll,
                 cache_update=cache_update, active=active)
-            return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+            return sample(logits, rid, nstep), new_cache
 
         self._decode = jax.jit(_decode, donate_argnums=(1,))
         self._insert = jax.jit(insert_cache_slot, donate_argnums=(0,))
+        self._build_prefill(model)
 
-        exact = self.exact_prefill
-        pkw = {} if cfg.family == "ssm" else {"pad_to": capacity}
+    def _build_prefill(self, model):
+        cfg, sample, exact = self.cfg, self._sample, self.exact_prefill
+        pkw = {} if cfg.family == "ssm" else {"pad_to": self.capacity}
 
-        def _prefill_step(p, batch, length):
+        def _prefill_step(p, batch, length, rid):
             lkw = dict(pkw)
             if not exact:
                 lkw["length"] = length
             logits, cache = model.prefill(p, batch, **lkw)
-            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+            # the first generated token is sample stream index 0
+            return sample(logits, rid, jnp.zeros_like(rid)), cache
 
         # one jit: its own shape cache gives one compile per prompt bucket
         self._prefill_jit = jax.jit(_prefill_step)
 
+    def _init_cache(self):
+        return self.model.init_cache(self.n_slots, self.capacity)
+
     def reset(self):
         """Fresh slot table + cache; compiled programs are kept (reusing a
         loop across traces never recompiles)."""
-        self.cache = self.model.init_cache(self.n_slots, self.capacity)
+        self.cache = self._init_cache()
         self.table = SlotTable(self.n_slots)
         self.t = 0
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
+        self.rejected = []
 
-    # -- admission prefill ---------------------------------------------------
+    # -- admission -----------------------------------------------------------
+    def _admission_error(self, req: Request) -> Optional[str]:
+        """Reason this request can NEVER be served by this loop (reject),
+        or None. Transient shortage is _can_admit's business instead."""
+        if not self.cfg.sliding_window and \
+                req.plen + req.max_new - 1 > self.capacity:
+            # pos % W would wrap the full-attention cache and silently
+            # overwrite live prompt KV
+            return (f"plen {req.plen} + max_new {req.max_new} exceeds "
+                    f"cache capacity {self.capacity}")
+        return None
+
+    def _can_admit(self, req: Request) -> bool:
+        """Transient admission gate (paged: page-pool backpressure)."""
+        return True
+
     def _prefill(self, req: Request):
         plen = req.plen
-        if plen + req.max_new - 1 > self.capacity and not self.cfg.sliding_window:
-            raise ValueError(
-                f"request {req.rid}: plen {plen} + max_new {req.max_new} "
-                f"exceeds cache capacity {self.capacity}")
         padded = plen if self.exact_prefill else \
             min(_round_up(plen, self.bucket), self.capacity)
         toks = np.zeros((1, padded), np.int32)
         toks[0, :plen] = req.tokens
         batch = _request_batch(self.cfg, req, jnp.asarray(toks))
         first, one = self._prefill_jit(
-            self.params, batch, jnp.full((1,), plen, jnp.int32))
+            self.params, batch, jnp.full((1,), plen, jnp.int32),
+            jnp.full((1,), req.rid, jnp.int32))
         self.prefill_dispatches += 1
         return int(first[0]), one
 
-    # -- one tick ------------------------------------------------------------
-    def tick(self, queue: RequestQueue):
-        """Admit into free slots, run one decode_step, retire finished."""
-        table = self.table
-        # 1. admission: fill free slots from the arrived queue; prefill
-        #    writes the slot's cache row in place (masked insert)
-        for slot in table.free_slots():
-            req = queue.pop_arrived(self.t)
-            if req is None:
-                break
-            first, one = self._prefill(req)
-            with _quiet_donation():
-                self.cache = self._insert(self.cache, one, jnp.int32(slot))
-            table.admit(slot, req, first, self.t)
-            if req.finished():  # max_new == 1 or instant EOS
-                table.retire(slot, self.t)
+    def _insert_request(self, slot: int, req: Request, one):
+        with _quiet_donation():
+            self.cache = self._insert(self.cache, one, jnp.int32(slot))
 
-        # 2. one decode dispatch over every live slot
+    def _retire(self, slot: int):
+        self.table.retire(slot, self.t)
+
+    def _admit(self, queue: RequestQueue):
+        """Fill free slots from the arrived queue; loops until no slot or
+        no admissible request is left, so a slot freed by an instant-
+        finishing admit is reconsidered immediately. Oversized requests
+        are recorded as failed (the trace keeps serving); a request the
+        loop COULD serve but can't right now (paged pool exhausted) stays
+        queued — admission backpressure, FIFO order preserved."""
+        while True:
+            free = self.table.free_slots()
+            if not free:
+                return
+            req = queue.peek_arrived(self.t)
+            if req is None:
+                return
+            err = self._admission_error(req)
+            if err is not None:
+                queue.pop_arrived(self.t)
+                req.failed = f"request {req.rid}: {err}"
+                req.done_tick = self.t
+                self.rejected.append(req)
+                continue
+            if not self._can_admit(req):
+                return
+            queue.pop_arrived(self.t)
+            slot = free[0]
+            first, one = self._prefill(req)
+            self._insert_request(slot, req, one)
+            self.table.admit(slot, req, first, self.t)
+            if req.finished():  # max_new == 1 or instant EOS
+                self._retire(slot)
+
+    # -- one tick ------------------------------------------------------------
+    def _dispatch_decode(self, rid, nstep):
+        table = self.table
+        with _quiet_donation():
+            return self._decode(
+                self.params, self.cache,
+                jnp.asarray(table.last_tok), jnp.asarray(table.pos),
+                jnp.asarray(table.active),
+                jnp.asarray(rid), jnp.asarray(nstep),
+            )
+
+    def tick(self, queue: RequestQueue):
+        """Admit -> one decode_step -> retire -> admit again.
+
+        The trailing admission (retire-then-admit) re-fills slots freed by
+        this tick's retirement: the new request prefills NOW (its first
+        token lands this tick) and joins the decode batch next tick,
+        instead of idling a full tick."""
+        table = self.table
+        self._admit(queue)
+
         if table.any_active():
-            with _quiet_donation():
-                nxt, self.cache = self._decode(
-                    self.params, self.cache,
-                    jnp.asarray(table.last_tok), jnp.asarray(table.pos),
-                    jnp.asarray(table.active),
-                )
+            rid = np.array([r.rid if r else 0 for r in table.req], np.int32)
+            nstep = np.array([len(r.out) if r else 0 for r in table.req],
+                             np.int32)
+            nxt, self.cache = self._dispatch_decode(rid, nstep)
             self.decode_dispatches += 1
             nxt_np = np.asarray(nxt)
-            # 3. readback + retirement (freed slots admit next tick)
             for slot in table.live_slots():
                 table.append(slot, int(nxt_np[slot]))
                 if table.req[slot].finished():
-                    table.retire(slot, self.t)
+                    self._retire(slot)
+            self._admit(queue)
         self.t += 1
+
+    def _extra_stats(self) -> Dict:
+        return {}
 
     def run(self, requests: Sequence[Request]) -> Dict:
         """Drive every request to completion; returns per-run stats.
@@ -220,6 +308,136 @@ class ServeLoop:
             tok_s=toks / max(wall, 1e-9),
             decode_dispatches=self.decode_dispatches,
             prefill_dispatches=self.prefill_dispatches,
+            failed=len(self.rejected),
+            failed_rids=[r.rid for r in self.rejected],
+            **self._extra_stats(),
+        )
+
+
+class PagedServeLoop(ServeLoop):
+    """Continuous batching over a shared KV page pool (DESIGN.md §12).
+
+    Device layout: ``PagedDecodeCache`` holds ONE pool of ``n_pages``
+    pages x ``page_size`` KV rows shared by every slot; the host
+    ``PageAllocator`` hands each admitted request exactly
+    ``ceil(min(plen + max_new - 1, window or inf) / page_size)`` pages,
+    recorded in a per-slot page-table row that rides into every paged
+    ``decode_step`` dispatch. Short requests stop reserving worst-case
+    rows, so ``n_slots`` can grow at the same KV-memory budget
+    (``n_pages * page_size`` rows vs contiguous ``n_slots * capacity``).
+
+    Admission backpressure: when the pool can't cover the head request's
+    pages it WAITS in the queue (FIFO) until retirement frees pages —
+    never a crash; a request whose demand exceeds the whole pool (or the
+    per-slot logical ``capacity``) is rejected gracefully like the
+    oversized case in the contiguous loop. Retirement returns the slot's
+    pages to the free list; a reused page is overwritten IN FULL at the
+    next admission and arithmetically masked until then, so stale KV can
+    never poison a new request (tests/test_serve_paged.py).
+
+    Greedy token streams are bit-identical to ``ServeLoop`` and
+    ``SerialLoop`` whenever the logical per-slot capacities match
+    (capacity a multiple of page_size; SWA rings page their `window`
+    rows). Recurrent-only families (xLSTM) have no KV to page — use
+    ``ServeLoop``; hybrid models keep dense per-slot SSM state rows.
+    """
+
+    def __init__(self, model: Model, params, *, n_slots: int = 8,
+                 capacity: int = 256, page_size: int = 16,
+                 n_pages: Optional[int] = None, bucket: int = 16,
+                 cache_update: str = "mask", unroll: int = 1,
+                 sampler: Optional[SamplerConfig] = None):
+        _check_servable(model)
+        cfg = model.config
+        if cfg.family == "ssm" or model.init_paged_cache is None:
+            raise ServeUnsupportedError(
+                f"{cfg.name}: family={cfg.family!r} keeps O(1) recurrent "
+                "state per slot — there is no KV cache to page; use the "
+                "contiguous ServeLoop")
+        self.page_size = page_size
+        W = cfg.sliding_window
+        logical = W if W else capacity
+        self.pages_per_slot = -(-logical // page_size)
+        if not W:  # prefill pad_to must equal the paged logical capacity
+            capacity = self.pages_per_slot * page_size
+        self.n_pages = n_slots * self.pages_per_slot if n_pages is None \
+            else n_pages
+        super().__init__(model, params, n_slots=n_slots, capacity=capacity,
+                         bucket=bucket, cache_update=cache_update,
+                         unroll=unroll, sampler=sampler)
+
+    def _build_programs(self, model, unroll):
+        sample, cache_update = self._sample, self.cache_update
+
+        def _decode(p, cache, page_table, tok, pos, active, rid, nstep):
+            logits, new_cache = model.paged_decode_step(
+                p, cache, page_table, tok, pos, unroll=unroll,
+                cache_update=cache_update, active=active)
+            return sample(logits, rid, nstep), new_cache
+
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+        self._insert = jax.jit(insert_cache_pages, donate_argnums=(0,))
+        self._build_prefill(model)
+
+    def _init_cache(self):
+        self.allocator = PageAllocator(self.n_pages, self.page_size)
+        self.page_table = np.full((self.n_slots, self.pages_per_slot), -1,
+                                  np.int32)
+        return self.model.init_paged_cache(self.n_slots, self.n_pages,
+                                           self.page_size)
+
+    def _rows_needed(self, req: Request) -> int:
+        rows = req.plen + req.max_new - 1
+        W = self.cfg.sliding_window
+        return min(rows, W) if W else rows
+
+    def _admission_error(self, req: Request) -> Optional[str]:
+        err = super()._admission_error(req)
+        if err is not None:
+            return err
+        need = self.allocator.pages_for(self._rows_needed(req))
+        if need > self.n_pages:
+            return (f"needs {need} pages ({self._rows_needed(req)} KV rows) "
+                    f"but the pool has only {self.n_pages} — can never be "
+                    "admitted")
+        return None
+
+    def _can_admit(self, req: Request) -> bool:
+        return self.allocator.free_pages >= \
+            self.allocator.pages_for(self._rows_needed(req))
+
+    def _insert_request(self, slot: int, req: Request, one):
+        need = self.allocator.pages_for(self._rows_needed(req))
+        ids = self.allocator.alloc(need)
+        assert ids is not None, "admission raced the allocator"
+        row = np.full(self.pages_per_slot, -1, np.int32)
+        row[:need] = ids
+        self.page_table[slot] = row
+        with _quiet_donation():
+            self.cache = self._insert(self.cache, one, jnp.int32(slot),
+                                      jnp.asarray(row))
+
+    def _retire(self, slot: int):
+        self.allocator.free(self.page_table[slot])
+        self.page_table[slot] = -1
+        super()._retire(slot)
+
+    def _dispatch_decode(self, rid, nstep):
+        table = self.table
+        with _quiet_donation():
+            return self._decode(
+                self.params, self.cache, jnp.asarray(self.page_table),
+                jnp.asarray(table.last_tok), jnp.asarray(table.pos),
+                jnp.asarray(table.active),
+                jnp.asarray(rid), jnp.asarray(nstep),
+            )
+
+    def _extra_stats(self) -> Dict:
+        return dict(
+            n_pages=self.n_pages,
+            page_size=self.page_size,
+            kv_rows=self.n_pages * self.page_size,
+            peak_pages=self.allocator.peak_in_use,
         )
 
 
@@ -229,29 +447,41 @@ class ServeLoop:
 
 
 class SerialLoop:
-    """One request at a time: prefill [1, plen], then greedy decode_step
-    with batch 1 until EOS/max_new. The parity oracle for ServeLoop —
-    token streams must match token-for-token (greedy argmax).
+    """One request at a time: prefill [1, plen], then decode_step with
+    batch 1 until EOS/max_new. The parity oracle for ServeLoop — token
+    streams must match token-for-token (greedy argmax, and sampled decode
+    too: the per-request fold_in streams are batch-independent).
 
     `capacity`: fixed KV capacity shared by every request (one decode
     compile, one prefill compile per distinct plen); None sizes each
     request's cache exactly (retraces per (plen, max_new) pair — the old
     examples/serve_decode.py behavior).
+
+    The decode jit donates its cache like ServeLoop's (one live copy per
+    step, not two) so benchmarks/serve_loop.py compares equal-memory
+    loops; the capacity guard still RAISES here (oracle semantics —
+    the batched loops reject gracefully instead).
     """
 
     def __init__(self, model: Model, params, *, capacity: int = None,
-                 cache_update: str = "mask", unroll: int = 1):
+                 cache_update: str = "mask", unroll: int = 1,
+                 sampler: Optional[SamplerConfig] = None):
         _check_servable(model)
         cfg = model.config
         self.model, self.params, self.cfg = model, params, cfg
         self.capacity = capacity
+        self.sampler = sampler or GREEDY
+        sample = make_sample_fn(self.sampler)
 
-        def _decode(p, cache, tok, pos):
+        def _decode(p, cache, tok, pos, rid, nstep):
             logits, new_cache = model.decode_step(
                 p, cache, tok, pos, unroll=unroll, cache_update=cache_update)
-            return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+            return sample(logits, rid, nstep), new_cache
 
-        self._decode = jax.jit(_decode)
+        # donate the cache: the request-at-a-time baseline must not hold
+        # two live copies per step (it would skew memory comparisons)
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+        self._sample_jit = jax.jit(sample)
 
         @functools.lru_cache(maxsize=None)
         def _prefill_fn(cap: int):
@@ -273,15 +503,19 @@ class SerialLoop:
                     f"{req.max_new} exceeds cache capacity {cap}")
             batch = _request_batch(self.cfg, req,
                                    jnp.asarray(req.tokens[None, :]))
+            rid = jnp.full((1,), req.rid, jnp.int32)
             logits, cache = self._prefill_fn(cap)(self.params, batch)
-            req.out.append(int(jnp.argmax(logits, -1)[0]))
+            req.out.append(int(self._sample_jit(
+                logits, rid, jnp.zeros((1,), jnp.int32))[0]))
             pos = req.plen
             while not req.finished():
-                tok, cache = self._decode(
-                    self.params, cache,
-                    jnp.asarray(req.out[-1:], jnp.int32),
-                    jnp.full((1,), pos, jnp.int32),
-                )
+                with _quiet_donation():
+                    tok, cache = self._decode(
+                        self.params, cache,
+                        jnp.asarray(req.out[-1:], jnp.int32),
+                        jnp.full((1,), pos, jnp.int32),
+                        rid, jnp.full((1,), len(req.out), jnp.int32),
+                    )
                 req.out.append(int(tok[0]))
                 pos += 1
                 steps += 1
@@ -294,7 +528,8 @@ class SerialLoop:
 
 def serial_generate(model: Model, params, requests: Sequence[Request], *,
                     capacity: int = None, cache_update: str = "mask",
-                    unroll: int = 1) -> Dict:
+                    unroll: int = 1, sampler: SamplerConfig = None) -> Dict:
     """Convenience wrapper: build a SerialLoop and drive `requests`."""
     return SerialLoop(model, params, capacity=capacity,
-                      cache_update=cache_update, unroll=unroll).run(requests)
+                      cache_update=cache_update, unroll=unroll,
+                      sampler=sampler).run(requests)

@@ -1,0 +1,74 @@
+"""Sampled (non-greedy) decode for the serve loops (DESIGN.md §12).
+
+Every request gets its own counter-based sample stream: the key for its
+``n``-th generated token is ``fold_in(fold_in(PRNGKey(seed), rid), n)``,
+so the stream depends only on (seed, rid, n) — NEVER on which slot the
+request landed in, which other requests share the batch, or how many
+loops/traces ran before it. That is the serving-side sibling of the
+per-(global-)client folded data keys in ``data/device.py``.
+
+Contract: ``temperature == 0`` IS greedy — the sampler builds the exact
+``argmax`` program of the greedy path (no epsilon-temperature softmax),
+so token streams are bit-identical, not merely close.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import NEG_INF
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    """Static sampling knobs (one compiled program per distinct config).
+
+    temperature: 0.0 = greedy argmax (bit-identical contract above);
+      > 0 scales logits before the categorical draw.
+    top_k: keep only the k highest logits (0 = full vocab).
+    seed: base of every request's sample stream.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+
+GREEDY = SamplerConfig()
+
+
+def make_sample_fn(sampler: SamplerConfig):
+    """-> f(logits [B, V], rid [B] int32, nstep [B] int32) -> tok [B] int32.
+
+    ``nstep`` is the request's generated-token counter (0 for the
+    prefill-produced first token). Greedy ignores rid/nstep entirely.
+    """
+    if sampler.temperature == 0.0:
+        def greedy(logits, rid, nstep):
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+
+        return greedy
+
+    temp, top_k, seed = sampler.temperature, sampler.top_k, sampler.seed
+    if temp < 0:
+        raise ValueError(f"temperature must be >= 0, got {temp}")
+    if top_k < 0:
+        raise ValueError(f"top_k must be >= 0 (0 = full vocab), got {top_k}")
+
+    def sample(logits, rid, nstep):
+        base = jax.random.PRNGKey(seed)
+        keys = jax.vmap(
+            lambda r, n: jax.random.fold_in(jax.random.fold_in(base, r), n)
+        )(rid, nstep)
+        scaled = logits.astype(jnp.float32) / temp
+        if top_k:
+            # clamp to the vocab: top_k > V means "keep everything", not
+            # an opaque lax.top_k shape error at first dispatch
+            kth = jax.lax.top_k(scaled, min(top_k, scaled.shape[-1]))[0][:, -1]
+            scaled = jnp.where(scaled >= kth[:, None], scaled, NEG_INF)
+        tok = jax.vmap(jax.random.categorical)(keys, scaled)
+        return tok.astype(jnp.int32)
+
+    return sample

@@ -37,6 +37,9 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     admit_tick: Optional[int] = None
     done_tick: Optional[int] = None
+    failed: Optional[str] = None  # rejection reason (oversized request /
+    #   impossible pool demand) — the loop records it and KEEPS SERVING
+    #   instead of crashing the whole trace
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
@@ -71,6 +74,14 @@ class RequestQueue:
 
     def __len__(self) -> int:
         return len(self._pending)
+
+    def peek_arrived(self, tick: int) -> Optional[Request]:
+        """Next admissible request WITHOUT removing it (admission
+        backpressure peeks first: an admissible head stays queued when the
+        page pool can't hold it yet)."""
+        if self._pending and self._pending[0].arrival <= tick:
+            return self._pending[0]
+        return None
 
     def pop_arrived(self, tick: int) -> Optional[Request]:
         if self._pending and self._pending[0].arrival <= tick:
@@ -129,3 +140,64 @@ class SlotTable:
         self.req[slot] = None
         self.active[slot] = False
         return req
+
+
+class PageAllocator:
+    """Host-side free-list allocator over the shared KV page pool.
+
+    Pages are unit-granular (no splitting/coalescing, so external
+    fragmentation cannot exist); the invariants that CAN break — and that
+    ``check()`` asserts — are conservation (free + in-use == n_pages),
+    disjointness, and no double alloc/free. Allocation is all-or-nothing:
+    a request either gets every page it asked for or none (admission
+    backpressure, never a half-admitted slot).
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 1 or page_size < 1:
+            raise ValueError("need n_pages >= 1 and page_size >= 1")
+        self.n_pages, self.page_size = n_pages, page_size
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))  # pop() asc
+        self._used: set = set()
+        self.peak_in_use = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return len(self._used)
+
+    def pages_for(self, rows: int) -> int:
+        """Pages covering `rows` KV rows."""
+        return -(-max(rows, 0) // self.page_size)
+
+    def alloc(self, n: int) -> Optional[np.ndarray]:
+        """n page ids (int32), or None if the pool can't cover it NOW
+        (caller backpressures; retirement will free pages)."""
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        assert not self._used.intersection(ids), "double allocation"
+        self._used.update(ids)
+        self.peak_in_use = max(self.peak_in_use, len(self._used))
+        return np.asarray(ids, np.int32)
+
+    def free(self, ids) -> None:
+        for i in ids:
+            i = int(i)
+            if i < 0:
+                continue  # unallocated page-table slots ride along
+            assert i in self._used, f"double free of page {i}"
+            self._used.discard(i)
+            self._free.append(i)
+
+    def check(self) -> None:
+        """Assert the free-list invariants (tests call this after every
+        admit/retire storm)."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate ids on the free list"
+        assert not free & self._used, "page both free and in use"
+        assert len(free) + len(self._used) == self.n_pages, "pages leaked"
+        assert all(0 <= i < self.n_pages for i in free | self._used)

@@ -161,6 +161,36 @@ def batch_specs(batch: Any, mesh: Mesh, batch_axes=("pod", "data")) -> Any:
     return jax.tree.map(one, batch)
 
 
+def paged_cache_specs(cache: Any, mesh: Mesh) -> Any:
+    """Paged decode-cache sharding: pool leaves are [L, n_pages, page_size,
+    Hkv, hd]. Pages are slot-exclusive and independent, so the PAGE dim
+    takes the data axes (each shard owns a contiguous page range; the
+    one-hot pool writes and page-table gathers stay masked/pass-through)
+    and kv-heads take the model axis when divisible. Hybrid SSM leaves
+    ([L, B, ...]) batch-shard like the contiguous cache. The page table
+    itself ([B, P] int32, host-owned) is replicated — every shard needs
+    every slot's page ids to resolve its gathers.
+    """
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dn = _axis_size(mesh, *daxes)
+    m = _axis_size(mesh, "model")
+    dspec = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim == 5:  # [L, n_pages, page_size, Hkv, hd] pool
+            if dn > 1 and leaf.shape[1] % dn == 0:
+                spec[1] = dspec
+            if m > 1 and leaf.shape[3] % m == 0:
+                spec[3] = "model"
+        elif leaf.ndim >= 3:  # hybrid SSM rows [L, B, ...]
+            if dn > 1 and leaf.shape[1] % dn == 0:
+                spec[1] = dspec
+        return P(*spec)
+
+    return jax.tree.map(one, cache)
+
+
 def cache_specs(cache: Any, mesh: Mesh, kv_seq_shard: bool = False) -> Any:
     """Decode-cache sharding: batch dim on ('pod','data'), kv-heads on model.
 

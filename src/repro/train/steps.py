@@ -21,6 +21,7 @@ from repro.sharding.partition import (
     batch_specs,
     cache_specs,
     named_shardings,
+    paged_cache_specs,
     param_specs,
 )
 
@@ -246,6 +247,58 @@ def make_slot_decode_bundle(model, mesh: Mesh, shape: ShapeConfig, *, unroll: in
     return StepBundle(jit_fn, make_inputs, "decode_step[slots]")
 
 
+def make_paged_decode_bundle(model, mesh: Mesh, shape: ShapeConfig, *,
+                             page_size: int = 16,
+                             n_pages: Optional[int] = None,
+                             unroll: int = 1) -> StepBundle:
+    """Paged-KV slot-masked decode (serve/PagedServeLoop's launch seam):
+    the cache is a shared page pool ([L, n_pages, page_size, Hkv, hd])
+    plus a per-dispatch [B, P] page table, so per-slot KV capacity is
+    pooled instead of reserved worst-case. ``shape.seq_len`` is the
+    per-slot LOGICAL capacity; ``n_pages`` defaults to the contiguous
+    worst case (B * ceil(seq_len / page_size)) — pass fewer pages to
+    actually pool (the host allocator provides admission backpressure).
+    """
+    cfg: ArchConfig = model.config
+    if model.paged_decode_step is None or model.init_paged_cache is None:
+        raise ValueError(f"{cfg.name}: no paged decode path "
+                         "(family has no KV cache to page)")
+    B = shape.global_batch
+    W = cfg.sliding_window
+    logical = W if W else shape.seq_len
+    P_slot = -(-logical // page_size)
+    N = B * P_slot if n_pages is None else n_pages
+
+    def step(params, cache, page_table, token, pos, active):
+        with logical_axis_rules(mesh):
+            return model.paged_decode_step(params, cache, page_table, token,
+                                           pos, unroll=unroll, active=active)
+
+    pstruct = params_struct(model)
+    pshard = _ns(mesh, param_specs(pstruct, mesh))
+    cstruct = jax.eval_shape(lambda: model.init_paged_cache(B, N, page_size))
+    cshard = _ns(mesh, paged_cache_specs(cstruct, mesh))
+    rep = _replicated(mesh)
+    jit_fn = jax.jit(
+        step,
+        in_shardings=(pshard, cshard, rep, rep, rep, rep),
+        out_shardings=(None, cshard),
+        donate_argnums=(1,),
+    )
+
+    def make_inputs():
+        return (
+            pstruct,
+            cstruct,
+            jax.ShapeDtypeStruct((B, P_slot), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.bool_),
+        )
+
+    return StepBundle(jit_fn, make_inputs, "decode_step[paged]")
+
+
 def build_bundle(model, mesh: Mesh, shape: ShapeConfig, *, kind: Optional[str] = None,
                  **kw) -> StepBundle:
     kind = kind or shape.kind
@@ -258,6 +311,11 @@ def build_bundle(model, mesh: Mesh, shape: ShapeConfig, *, kind: Optional[str] =
     if kind == "prefill":
         return make_prefill_bundle(model, mesh, shape, unroll=kw.get("unroll", 1))
     if kind == "decode":
+        if kw.pop("paged", False):
+            return make_paged_decode_bundle(
+                model, mesh, shape, unroll=kw.get("unroll", 1),
+                page_size=kw.get("page_size", 16),
+                n_pages=kw.get("n_pages"))
         # defaults flipped post-§Perf: mask update + length-sharded cache
         # (1600x collective reduction on qwen1.5-32b decode_32k)
         maker = make_slot_decode_bundle if kw.pop("slot_masked", False) \

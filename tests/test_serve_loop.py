@@ -209,16 +209,66 @@ def test_rerun_resets_state_and_stats_are_per_trace():
     assert s1["decode_dispatches"] == s2["decode_dispatches"]
 
 
-def test_capacity_overflow_raises_in_both_loops():
+def test_oversized_request_fails_gracefully_mid_trace():
     """A request that would wrap the full-attention cache (pos % W
-    overwriting live prompt KV) must raise, not silently corrupt."""
+    overwriting live prompt KV) is REJECTED — recorded as failed on the
+    Request and surfaced in run() stats — while the rest of the trace
+    keeps serving (regression: ServeLoop used to raise AFTER popping the
+    request from the queue, killing the whole trace and stranding live
+    slots). SerialLoop is the oracle and still raises."""
     model = build_model_by_name("qwen1.5-32b", reduced=True)
+    cfg = model.config
     params = model.init(jax.random.PRNGKey(0))
-    big = Request(rid=0, tokens=np.arange(14, dtype=np.int32), max_new=8)
-    with pytest.raises(ValueError, match="capacity"):
-        ServeLoop(model, params, n_slots=2, capacity=16, bucket=8).run([big])
+    r = np.random.RandomState(5)
+    good = [Request(rid=i, tokens=r.randint(0, cfg.vocab_size, 6 + i),
+                    max_new=4, arrival=0) for i in (0, 2)]
+    big = Request(rid=1, tokens=np.arange(14, dtype=np.int32), max_new=8,
+                  arrival=0)
+    trace = [good[0], big, good[1]]
+
+    loop = ServeLoop(model, params, n_slots=2, capacity=16, bucket=8)
+    served = _clone(trace)
+    stats = loop.run(served)
+    assert stats["failed"] == 1 and stats["failed_rids"] == [1]
+    assert "capacity" in served[1].failed and served[1].out == []
+    assert served[1].done_tick is not None
+
+    ref = _clone(good)
+    SerialLoop(model, params).run(ref)
+    assert [served[0].out, served[2].out] == [q.out for q in ref]
+
     with pytest.raises(ValueError, match="capacity"):
         SerialLoop(model, params, capacity=16).run([big.clone()])
+
+
+def test_retire_then_admit_reuses_slot_same_tick():
+    """Tick order is admit -> decode -> retire -> admit: a slot freed by
+    retirement admits the next waiting request within the SAME tick, and
+    instant-finishing admits chain through one admission pass — the
+    back-to-back latency win of the reordered tick (regression: freed
+    slots used to idle a full tick)."""
+    model = build_model_by_name("qwen1.5-32b", reduced=True)
+    cfg = model.config
+    params = model.init(jax.random.PRNGKey(0))
+    r = np.random.RandomState(6)
+
+    # three instant finishers (max_new=1: prefill IS the whole request)
+    # on ONE slot: all chain through tick 0's admission pass, no decode
+    instant = [Request(rid=i, tokens=r.randint(0, cfg.vocab_size, 5),
+                       max_new=1, arrival=0) for i in range(3)]
+    loop = ServeLoop(model, params, n_slots=1, capacity=32, bucket=8)
+    stats = loop.run(instant)
+    assert stats["ticks"] == 1 and stats["decode_dispatches"] == 0
+    assert all(q.done_tick == 0 for q in instant)
+
+    # back-to-back pair on one slot: B is admitted (prefill + first
+    # token) the very tick A retires, not one tick later
+    ab = [Request(rid=0, tokens=r.randint(0, cfg.vocab_size, 5), max_new=3,
+                  arrival=0),
+          Request(rid=1, tokens=r.randint(0, cfg.vocab_size, 5), max_new=3,
+                  arrival=0)]
+    loop.run(ab)
+    assert ab[1].admit_tick == ab[0].done_tick
 
 
 def test_requests_arrive_mid_flight():
