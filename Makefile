@@ -2,7 +2,8 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test test-fast collect test-sharded ci smoke bench-round-engine \
-	bench-controller-driver bench-sharded bench-serve bench-serve-paged
+	bench-controller-driver bench-sharded bench-serve bench-serve-paged \
+	bench-paged-kernel
 
 test:
 	python -m pytest -x -q
@@ -37,3 +38,6 @@ bench-serve:
 
 bench-serve-paged:
 	python benchmarks/serve_paged.py
+
+bench-paged-kernel:
+	python -m benchmarks.run --only paged_kernel

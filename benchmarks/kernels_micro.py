@@ -1,9 +1,18 @@
-"""Kernel microbenchmarks: us_per_call of the three Pallas kernels
-(interpret mode on CPU — relative numbers track algorithmic cost, the TPU
-roofline lives in benchmarks/roofline.py) plus their jnp reference paths.
+"""Kernel microbenchmarks: us_per_call of the Pallas kernels (interpret
+mode on CPU — relative numbers track algorithmic cost, the TPU roofline
+lives in benchmarks/roofline.py) plus their jnp reference paths.
+
+``run_paged`` (registered as ``paged_kernel`` in benchmarks/run.py /
+``make bench-paged-kernel``) is the paged-decode micro: XLA mask vs
+scatter vs the Pallas page-walk kernel at several pool sizes, with the
+parity asserts inline — it doubles as the kernel-parity smoke stage in
+scripts/ci.sh. Rows append to ``experiments/kernels_micro_paged.jsonl``.
 """
 from __future__ import annotations
 
+import json
+import math
+import os
 import time
 
 import jax
@@ -62,4 +71,112 @@ def run(scale=None, out_rows: list = None, csv_dir=None):
                      derived=f"rows=8192|d=1024|GB={x.nbytes/1e9:.3f}"))
     rows.append(dict(name="kernel/rmsnorm/pallas_interp", us_per_call=t_pal,
                      derived="same"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# paged-decode micro: XLA mask vs scatter vs the Pallas page-walk kernel
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _xla_paged_decode(update: str):
+    """Operand-level mirror of attention.paged_decode_attention_block's
+    XLA paths: dense [B, P*ps, ...] gather + full softmax, pool write via
+    the whole-pool one-hot selector ("mask") or .at[].set ("scatter")."""
+
+    def fn(q, k_pool, v_pool, k_new, v_new, pt, pos):
+        B, Hq, hd = q.shape
+        N, ps, Hkv, _ = k_pool.shape
+        P = pt.shape[1]
+        G = Hq // Hkv
+        idx = pos.astype(jnp.int32)
+        phys = jnp.take_along_axis(pt, (idx // ps)[:, None], axis=1)[:, 0]
+        if update == "mask":
+            sel = (jnp.arange(N, dtype=jnp.int32)[None, :] == phys[:, None])[:, :, None] \
+                & (jnp.arange(ps, dtype=jnp.int32)[None, None, :] == (idx % ps)[:, None, None])
+            selv = sel.astype(k_new.dtype)
+            k_pool = jnp.where(sel.any(0)[..., None, None],
+                               jnp.einsum("bnr,bhd->nrhd", selv, k_new), k_pool)
+            v_pool = jnp.where(sel.any(0)[..., None, None],
+                               jnp.einsum("bnr,bhd->nrhd", selv, v_new), v_pool)
+        else:
+            phys_w = jnp.where(phys >= 0, phys, N)
+            k_pool = k_pool.at[phys_w, idx % ps].set(k_new, mode="drop")
+            v_pool = v_pool.at[phys_w, idx % ps].set(v_new, mode="drop")
+        safe_pt = jnp.maximum(pt, 0)
+        k = k_pool[safe_pt].reshape(B, P * ps, Hkv, hd)
+        v = v_pool[safe_pt].reshape(B, P * ps, Hkv, hd)
+        i = jnp.arange(P * ps, dtype=jnp.int32)[None, :]
+        valid = jnp.repeat(pt >= 0, ps, axis=1) & (i <= pos[:, None])
+        qg = q.reshape(B, Hkv, G, hd)
+        logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32)
+        logits *= 1.0 / math.sqrt(hd)
+        logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhgk,bkhd->bhgd", w.astype(v.dtype), v)
+        return o.reshape(B, Hq, hd), k_pool, v_pool
+
+    return fn
+
+
+def run_paged(scale=None, out_rows: list = None, csv_dir=None,
+              json_path="experiments/kernels_micro_paged.jsonl"):
+    """mask vs scatter vs Pallas kernel at several pool sizes (B=8 slots,
+    Hq=8/Hkv=2, hd=64, page_size=16). Asserts pool-bitwise + output
+    parity on every run — the scripts/ci.sh kernel-parity smoke stage."""
+    from repro.kernels.paged_attention import ops as pa_ops
+
+    rows = out_rows if out_rows is not None else []
+    r = np.random.RandomState(0)
+    B, Hq, Hkv, hd, ps = 8, 8, 2, 64, 16
+    active = jnp.ones((B,), bool)
+    json_rows = []
+    for n_pages in (64, 256, 1024):
+        P = n_pages // B
+        q = jnp.asarray(r.randn(B, Hq, hd), jnp.float32)
+        kp = jnp.asarray(r.randn(n_pages, ps, Hkv, hd), jnp.float32)
+        vp = jnp.asarray(r.randn(n_pages, ps, Hkv, hd), jnp.float32)
+        kn = jnp.asarray(r.randn(B, Hkv, hd), jnp.float32)
+        vn = jnp.asarray(r.randn(B, Hkv, hd), jnp.float32)
+        pt = jnp.asarray(r.permutation(n_pages)[:B * P].reshape(B, P)
+                         .astype(np.int32))
+        pos = jnp.asarray(r.randint(0, P * ps, size=B), jnp.int32)
+
+        mask_fn = jax.jit(_xla_paged_decode("mask"))
+        scat_fn = jax.jit(_xla_paged_decode("scatter"))
+
+        def kern_fn(q, kp, vp, kn, vn, pt, pos):
+            return pa_ops.paged_decode_attention(
+                q, kp, vp, kn, vn, pt, pos, window=0, active=active)
+
+        # parity bar before timing: pools bitwise, outputs tight-allclose
+        om, km, vm = mask_fn(q, kp, vp, kn, vn, pt, pos)
+        os_, ks, vs = scat_fn(q, kp, vp, kn, vn, pt, pos)
+        ok_, kk, vk = kern_fn(q, kp, vp, kn, vn, pt, pos)
+        assert np.array_equal(np.asarray(km), np.asarray(ks)), "mask != scatter pool"
+        assert np.array_equal(np.asarray(kk), np.asarray(ks)), "kernel != scatter pool"
+        assert np.array_equal(np.asarray(vk), np.asarray(vs)), "kernel != scatter pool (v)"
+        np.testing.assert_allclose(np.asarray(ok_), np.asarray(om),
+                                   atol=1e-5, rtol=1e-5)
+
+        pool_gb = 2 * kp.nbytes / 1e9
+        for label, fn in (("xla_mask", mask_fn), ("xla_scatter", scat_fn),
+                          ("pallas_kernel", kern_fn)):
+            t = _time(fn, q, kp, vp, kn, vn, pt, pos)
+            rows.append(dict(
+                name=f"kernel/paged_decode/{label}/pages{n_pages}",
+                us_per_call=t,
+                derived=f"B={B}|ps={ps}|pool_GB={pool_gb:.4f}|parity=ok"))
+            json_rows.append(dict(
+                bench="paged_kernel", path=label, n_pages=n_pages,
+                page_size=ps, slots=B, hq=Hq, hkv=Hkv, hd=hd,
+                pool_gb=round(pool_gb, 5), us_per_call=round(t, 1),
+                backend=jax.default_backend(), parity="ok"))
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "a") as f:
+            for jr in json_rows:
+                f.write(json.dumps(jr) + "\n")
     return rows

@@ -40,6 +40,7 @@ BENCHES = {
     "fig7": fig7_alpha_sensitivity.run,
     "fig8": fig8_clients.run,
     "kernels": kernels_micro.run,
+    "paged_kernel": kernels_micro.run_paged,
     "beyond": beyond_paper.run,
     "roofline": roofline.run,
     "round_engine": round_engine.run,
@@ -55,6 +56,10 @@ def main() -> None:
     ap.add_argument("--full", action="store_true", help="paper-scale rounds")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
     ap.add_argument("--csv-dir", default="experiments/bench_csv")
+    ap.add_argument("--force", action="store_true",
+                    help="re-measure cached artifacts (roofline: redo the "
+                    "vecavg/paged-attention timing rows instead of reusing "
+                    "experiments/dryrun/*.json)")
     args = ap.parse_args()
 
     scale = FULL if args.full else QUICK
@@ -67,8 +72,11 @@ def main() -> None:
         fn = BENCHES[name]
         t0 = time.time()
         before = len(rows)
+        kw = {"csv_dir": args.csv_dir}
+        if name == "roofline":
+            kw["force"] = args.force
         try:
-            fn(scale, rows, csv_dir=args.csv_dir)
+            fn(scale, rows, **kw)
         except Exception as e:  # noqa: BLE001
             rows.append(dict(name=f"{name}/ERROR", us_per_call=0.0,
                              derived=f"{type(e).__name__}:{e}"))

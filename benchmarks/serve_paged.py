@@ -19,8 +19,11 @@ DESIGN.md §12 — on real accelerators decode is bandwidth-bound and the
 extra rows ride along). SWA archs (starcoder2) start from a compact
 `window`-row ring, so their pooling headroom is only W / avg_rows.
 
-Greedy streams are asserted identical between both loops on every run
-(the parity bar; per-token parity vs SerialLoop is pinned in
+Each budget point runs the paged loop under both ``cache_update`` paths
+("mask" — the XLA one-hot baseline — and "kernel" — the Pallas page-walk
+decode kernel), reusing one contiguous measurement; greedy streams are
+asserted identical between the loops on every run and for every update
+path (the parity bar; per-token parity vs SerialLoop is pinned in
 tests/test_serve_paged.py). Rows append to
 ``experiments/serve_paged.jsonl``.
 """
@@ -60,35 +63,48 @@ def _clone(reqs):
     return [r.clone() for r in reqs]
 
 
-def bench_point(model, params, trace, contig_slots: int, paged_slots: int):
-    """One equal-budget comparison; returns (contig, paged, budget_rows)."""
+def bench_point(model, params, trace, contig_slots: int, paged_slots: int,
+                cache_update: str = "mask", contig=None):
+    """One equal-budget comparison; returns (contig, paged, budget_rows).
+
+    ``cache_update`` selects the paged loop's pool-update path ("mask" =
+    the XLA baseline, "kernel" = the Pallas page-walk kernel); the greedy
+    parity bar vs the contiguous loop holds for BOTH — a kernel row that
+    changed a single token would fail here before any timing is read.
+    Pass a prior ``contig`` result (with its ``outs``) to reuse the
+    contiguous measurement across update paths at the same budget.
+    """
     W = model.config.sliding_window
     per_slot_rows = W if W else CAPACITY
     budget_rows = contig_slots * per_slot_rows
     n_pages = budget_rows // PAGE_SIZE
 
-    cloop = ServeLoop(model, params, n_slots=contig_slots, capacity=CAPACITY)
-    cloop.run(_clone(trace))  # warmup compiles; run() resets per trace
-    c_reqs = _clone(trace)
-    contig = cloop.run(c_reqs)
+    if contig is None:
+        cloop = ServeLoop(model, params, n_slots=contig_slots,
+                          capacity=CAPACITY)
+        cloop.run(_clone(trace))  # warmup compiles; run() resets per trace
+        c_reqs = _clone(trace)
+        contig = cloop.run(c_reqs)
+        contig["outs"] = [q.out for q in c_reqs]
 
     ploop = PagedServeLoop(model, params, n_slots=paged_slots,
                            capacity=CAPACITY, page_size=PAGE_SIZE,
-                           n_pages=n_pages)
+                           n_pages=n_pages, cache_update=cache_update)
     ploop.run(_clone(trace))
     p_reqs = _clone(trace)
     paged = ploop.run(p_reqs)
 
     # parity bar: pooled pages must not change a single greedy token
-    for qc, qp in zip(c_reqs, p_reqs):
-        assert qc.out == qp.out, (
-            f"request {qc.rid}: paged {qp.out} != contiguous {qc.out}")
+    for c_out, qp in zip(contig["outs"], p_reqs):
+        assert c_out == qp.out, (
+            f"request {qp.rid} ({cache_update}): paged {qp.out} != "
+            f"contiguous {c_out}")
     return contig, paged, budget_rows
 
 
 def run(scale=None, out_rows: list = None, csv_dir=None, *,
         archs=("starcoder2-3b", "qwen1.5-32b"), n_requests=24, rate=RATE,
-        json_path=None):
+        paged_updates=("mask", "kernel"), json_path=None):
     rows = out_rows if out_rows is not None else []
     json_rows = []
     for arch in archs:
@@ -98,33 +114,37 @@ def run(scale=None, out_rows: list = None, csv_dir=None, *,
                               max_new_choices=MAX_NEWS,
                               vocab_size=model.config.vocab_size, seed=0)
         for contig_slots, paged_slots in BUDGETS[arch]:
-            contig, paged, budget_rows = bench_point(
-                model, params, trace, contig_slots, paged_slots)
-            speedup = paged["tok_s"] / max(contig["tok_s"], 1e-9)
-            jrow = dict(
-                bench="serve_paged", arch=arch, n_requests=n_requests,
-                rate=rate, plens=list(PLENS), max_news=list(MAX_NEWS),
-                kv_rows_budget=budget_rows, page_size=PAGE_SIZE,
-                contig_slots=contig_slots, paged_slots=paged_slots,
-                n_pages=paged["n_pages"], peak_pages=paged["peak_pages"],
-                contig_tok_s=round(contig["tok_s"], 2),
-                contig_dispatches=contig["decode_dispatches"],
-                paged_tok_s=round(paged["tok_s"], 2),
-                paged_dispatches=paged["decode_dispatches"],
-                tokens=paged["tokens"],
-                parity="ok",
-                speedup=round(speedup, 3),
-            )
-            json_rows.append(jrow)
-            print(json.dumps(jrow))
-            rows.append(dict(
-                name=f"serve_paged/{arch}/rows{budget_rows}",
-                us_per_call=1e6 / max(paged["tok_s"], 1e-9),
-                derived=(f"contig_tok_s={contig['tok_s']:.1f}|"
-                         f"paged_tok_s={paged['tok_s']:.1f}|"
-                         f"slots={contig_slots}->{paged_slots}|"
-                         f"speedup={speedup:.2f}x"),
-            ))
+            contig = None
+            for cache_update in paged_updates:
+                contig, paged, budget_rows = bench_point(
+                    model, params, trace, contig_slots, paged_slots,
+                    cache_update=cache_update, contig=contig)
+                speedup = paged["tok_s"] / max(contig["tok_s"], 1e-9)
+                jrow = dict(
+                    bench="serve_paged", arch=arch, n_requests=n_requests,
+                    rate=rate, plens=list(PLENS), max_news=list(MAX_NEWS),
+                    kv_rows_budget=budget_rows, page_size=PAGE_SIZE,
+                    cache_update=cache_update,
+                    contig_slots=contig_slots, paged_slots=paged_slots,
+                    n_pages=paged["n_pages"], peak_pages=paged["peak_pages"],
+                    contig_tok_s=round(contig["tok_s"], 2),
+                    contig_dispatches=contig["decode_dispatches"],
+                    paged_tok_s=round(paged["tok_s"], 2),
+                    paged_dispatches=paged["decode_dispatches"],
+                    tokens=paged["tokens"],
+                    parity="ok",
+                    speedup=round(speedup, 3),
+                )
+                json_rows.append(jrow)
+                print(json.dumps(jrow))
+                rows.append(dict(
+                    name=f"serve_paged/{arch}/rows{budget_rows}/{cache_update}",
+                    us_per_call=1e6 / max(paged["tok_s"], 1e-9),
+                    derived=(f"contig_tok_s={contig['tok_s']:.1f}|"
+                             f"paged_tok_s={paged['tok_s']:.1f}|"
+                             f"slots={contig_slots}->{paged_slots}|"
+                             f"speedup={speedup:.2f}x"),
+                ))
     if json_path:
         os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
         with open(json_path, "a") as f:
@@ -138,7 +158,8 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: one arch, one tight budget point, few "
                     "requests — still exercises allocation, backpressure, "
-                    "page reuse and the parity assert end to end")
+                    "page reuse and the parity assert end to end for BOTH "
+                    "cache_update paths (mask and the Pallas kernel)")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--json", default="experiments/serve_paged.jsonl")
     args = ap.parse_args()

@@ -15,9 +15,14 @@ python -m pytest --collect-only -q
 if [ "$MODE" = fast ]; then
   echo "== tier-1 (fast lane): pytest -m 'not slow' =="
   python -m pytest -x -q -m "not slow"
+  echo "== smoke: paged-kernel parity (mask vs scatter vs Pallas) =="
+  # operand-level pool-bitwise + output parity asserts run before any
+  # timing inside the micro — a kernel regression fails the stage
+  python -m benchmarks.run --only paged_kernel
   echo "== smoke: benchmarks/serve_paged.py (paged-parity) =="
   # exercises the page allocator + backpressure + reuse end to end and
-  # asserts paged==contiguous greedy streams on every CI run
+  # asserts paged==contiguous greedy streams for BOTH cache_update
+  # paths (mask and kernel) on every CI run
   python benchmarks/serve_paged.py --smoke
   echo "CI OK (fast lane)"
   exit 0
@@ -43,5 +48,7 @@ if [ "$MODE" = "all" ]; then
   python benchmarks/serve_loop.py --smoke
   echo "== smoke: benchmarks/serve_paged.py =="
   python benchmarks/serve_paged.py --smoke
+  echo "== smoke: scripts/profile.sh (env harness + kernel parity) =="
+  bash scripts/profile.sh --smoke
 fi
 echo "CI OK"

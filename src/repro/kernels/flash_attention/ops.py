@@ -1,8 +1,7 @@
 """Public flash-attention op: Pallas on TPU, interpret-mode on CPU."""
 from __future__ import annotations
 
-import jax
-
+from repro.kernels import auto_interpret
 from repro.kernels.flash_attention import ref
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 
@@ -15,5 +14,5 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return flash_attention_pallas(
         q, k, v, causal=causal, window=int(window), q_offset=q_offset,
         block_q=block_q, block_k=block_k,
-        interpret=jax.default_backend() != "tpu",
+        interpret=auto_interpret(),
     )

@@ -1,0 +1,79 @@
+"""jnp oracle for the paged-attention decode kernel, at kernel-operand
+granularity (post-projection q/k_new/v_new — no model weights involved).
+
+This is EXACTLY the XLA computation models/attention.py performs on its
+"mask" / "scatter" paths (dense [B, P*ps, Hkv, hd] gather + full-softmax
+with the paged_slot_valid mask; one-hot / scatter pool write), so the
+parity suite in tests/test_paged_kernel.py can pin the Pallas kernel
+against it: pool contents must match BITWISE (both sides write the k_new
+rows verbatim), attention outputs to tight allclose (online softmax
+reassociates the fp32 reduction, so ULP-level differences are expected —
+greedy argmax streams still match bit-for-bit end to end).
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def slot_valid(page_table, pos, page_size: int, window: int):
+    """attention.paged_slot_valid, duplicated here so the kernel package
+    stays importable without the models layer."""
+    B, P = page_table.shape
+    cap = P * page_size
+    i = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    alloc = jnp.repeat(page_table >= 0, page_size, axis=1)
+    posb = pos[:, None].astype(jnp.int32)
+    if window:
+        p_i = posb - ((posb - i) % window)
+        return alloc & (i < window) & (p_i >= 0)
+    return alloc & (i <= posb)
+
+
+def paged_decode_attention(q, k_pool, v_pool, k_new, v_new, page_table,
+                           pos, active, *, window: int = 0):
+    """Same signature/semantics as kernel.paged_decode_attention_pallas:
+    write the new token's row (active slots), then dense-gather + masked
+    full softmax. Returns (o [B,Hq,hd], k_pool', v_pool')."""
+    B, Hq, hd = q.shape
+    N, ps, Hkv, _ = k_pool.shape
+    P = page_table.shape[1]
+    G = Hq // Hkv
+    pos = pos.astype(jnp.int32)
+
+    idx = ((pos % window) if window else pos).astype(jnp.int32)
+    phys = jnp.take_along_axis(page_table, (idx // ps)[:, None], axis=1)[:, 0]
+    ok = (phys >= 0) & active
+    phys_w = jnp.where(ok, phys, N)  # out of bounds -> dropped
+    k_pool = k_pool.at[phys_w, idx % ps].set(k_new, mode="drop")
+    v_pool = v_pool.at[phys_w, idx % ps].set(v_new, mode="drop")
+
+    safe_pt = jnp.maximum(page_table, 0)
+    k = k_pool[safe_pt].reshape(B, P * ps, Hkv, hd)
+    v = v_pool[safe_pt].reshape(B, P * ps, Hkv, hd)
+    valid = slot_valid(page_table, pos, ps, window)
+
+    qg = q.reshape(B, Hkv, G, hd)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32)
+    logits *= 1.0 / math.sqrt(hd)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    w = jnp.exp(logits - logits.max(-1, keepdims=True))
+    w = jnp.where(valid[:, None, None, :], w, 0.0)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhgk,bkhd->bhgd", w.astype(v.dtype), v)
+    return o.reshape(B, Hq, hd).astype(q.dtype), k_pool, v_pool
+
+
+def paged_insert(k_pool, v_pool, k_src, v_src, page_ids):
+    """Layer-stacked prefill-into-pages oracle: pools [L,N,ps,Hkv,hd],
+    src [L,P,ps,Hkv,hd], page_ids [P] (-1 skipped). Allocated pages are
+    overwritten in full with the verbatim source rows."""
+    ok = page_ids >= 0
+    N = k_pool.shape[1]
+    dst = jnp.where(ok, page_ids, N)  # out of bounds -> dropped
+    k_pool = k_pool.at[:, dst].set(k_src, mode="drop")
+    v_pool = v_pool.at[:, dst].set(v_src, mode="drop")
+    return k_pool, v_pool

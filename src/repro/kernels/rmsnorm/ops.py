@@ -1,8 +1,7 @@
 """Public RMSNorm op: Pallas on TPU, interpret-mode on CPU."""
 from __future__ import annotations
 
-import jax
-
+from repro.kernels import auto_interpret
 from repro.kernels.rmsnorm import ref
 from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
 
@@ -10,4 +9,4 @@ from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
 def rmsnorm(x, scale, *, eps: float = 1e-6, use_pallas: bool = True):
     if not use_pallas:
         return ref.rmsnorm(x, scale, eps=eps)
-    return rmsnorm_pallas(x, scale, eps=eps, interpret=jax.default_backend() != "tpu")
+    return rmsnorm_pallas(x, scale, eps=eps, interpret=auto_interpret())

@@ -15,19 +15,16 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import auto_interpret
 from repro.kernels.vecavg import ref
 from repro.kernels.vecavg.kernel import vecavg_pallas
-
-
-def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def vecavg(u, p, scale, *, use_pallas: bool = True, block_d: int = 512):
     """Matrix form: u [C, D] -> (delta_w [D], sqnorms [C])."""
     if not use_pallas:
         return ref.vecavg(u, p, scale)
-    return vecavg_pallas(u, p, scale, block_d=block_d, interpret=_auto_interpret())
+    return vecavg_pallas(u, p, scale, block_d=block_d, interpret=auto_interpret())
 
 
 def vecavg_tree(grads_stacked: Any, p, scale, *, use_pallas: bool = True,

@@ -340,11 +340,28 @@ def paged_decode_attention_block(cfg, p, x, pool: PagedKVPool, page_table,
 
     active: optional bool [B] slot mask — inactive rows never write and
     their outputs are garbage the caller must ignore.
+
+    cache_update="kernel" routes to kernels/paged_attention: the Pallas
+    decode kernel walks the page table in-kernel (scalar prefetch) with
+    online-softmax accumulation — no [B, P*page_size, ...] gather — and
+    fuses the one-row pool write into the same launch. Pool bits are
+    identical to "mask"/"scatter"; the attention output reassociates the
+    fp32 softmax reduction (ULP-level differences; greedy streams still
+    match bit-for-bit, asserted in tests/test_paged_kernel.py).
     """
     B = x.shape[0]
     N, ps, Hkv, hd = pool.k.shape
     P = page_table.shape[1]
     q, k_new, v_new = _project_qkv(cfg, p, x, pos[:, None], cfg.rope)
+
+    if cache_update == "kernel":
+        from repro.kernels.paged_attention import ops as pa_ops
+
+        o, k_pool, v_pool = pa_ops.paged_decode_attention(
+            q[:, 0], pool.k, pool.v, k_new[:, 0], v_new[:, 0],
+            page_table, pos, window=window, active=active)
+        o = o.reshape(B, 1, cfg.q_dim)
+        return o @ p["w_o"], PagedKVPool(k_pool, v_pool)
 
     idx = ((pos % window) if window else pos).astype(jnp.int32)
     phys = jnp.take_along_axis(page_table, (idx // ps)[:, None], axis=1)[:, 0]
@@ -385,7 +402,8 @@ def paged_decode_attention_block(cfg, p, x, pool: PagedKVPool, page_table,
     return o @ p["w_o"], new_pool
 
 
-def insert_kv_pages(pool: PagedKVPool, one: KVCache, page_ids) -> PagedKVPool:
+def insert_kv_pages(pool: PagedKVPool, one: KVCache, page_ids,
+                    use_kernel: bool = False) -> PagedKVPool:
     """Write a batch-1 prefill cache into pool pages ``page_ids`` [P]
     (int32, -1 = unallocated -> skipped); slot page ``j`` gets rows
     ``[j*page_size, (j+1)*page_size)`` of ``one``. ``one.k`` [1, cap, ...]
@@ -394,11 +412,21 @@ def insert_kv_pages(pool: PagedKVPool, one: KVCache, page_ids) -> PagedKVPool:
     never leak a previous request's K/V into the new owner's valid range
     (poisoning guard #1; the arithmetic validity mask of
     :func:`paged_decode_attention_block` is guard #2).
+
+    use_kernel=True swaps the full-pool jnp.where (selector over all N
+    pages) for the kernels/paged_attention routed block-write kernel that
+    only touches the slot's own pages — same bits either way.
     """
     N, ps, Hkv, hd = pool.k.shape
     P = page_ids.shape[0]
     src_k = one.k[0].reshape(P, ps, Hkv, hd)
     src_v = one.v[0].reshape(P, ps, Hkv, hd)
+    if use_kernel:
+        from repro.kernels.paged_attention import ops as pa_ops
+
+        k, v = pa_ops.paged_insert(
+            pool.k[None], pool.v[None], src_k[None], src_v[None], page_ids)
+        return PagedKVPool(k=k[0], v=v[0])
     sel = (page_ids[:, None] == jnp.arange(N, dtype=jnp.int32)[None, :]) \
         & (page_ids >= 0)[:, None]  # [P, N]; page ids are distinct
     selv = sel.astype(src_k.dtype)

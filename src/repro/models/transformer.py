@@ -404,14 +404,20 @@ def paged_decode_step(cfg, p, cache: PagedDecodeCache, page_table, token, pos,
 
 
 def insert_cache_pages(cache: PagedDecodeCache, one: DecodeCache, slot,
-                       page_ids) -> PagedDecodeCache:
+                       page_ids, cache_update: str = "mask") -> PagedDecodeCache:
     """Page-granular admission: write one request's prefill cache (batch 1)
     into its allocated pool pages ``page_ids`` [P] (-1 = unallocated,
     skipped) and — for hybrid models — its SSM state into row ``slot``.
     The prefill cache is zero-padded up to P * page_size rows so every
     allocated page is overwritten in full (see attn.insert_kv_pages).
+
+    cache_update="kernel" uses the layer-stacked kernels/paged_attention
+    routed block-write (grid over layers x slot pages — one launch for
+    the whole stack, only the slot's own pages touched) instead of the
+    per-layer full-pool jnp.where; pool bits are identical.
     """
-    N, ps = cache.kv.k.shape[1], cache.kv.k.shape[2]
+    L, N, ps = cache.kv.k.shape[0], cache.kv.k.shape[1], cache.kv.k.shape[2]
+    Hkv, hd = cache.kv.k.shape[3], cache.kv.k.shape[4]
     P = page_ids.shape[0]
     cap, have = P * ps, one.kv.k.shape[2]
     one_kv = one.kv
@@ -421,10 +427,20 @@ def insert_cache_pages(cache: PagedDecodeCache, one: DecodeCache, slot,
             v=jnp.pad(one_kv.v, ((0, 0), (0, 0), (0, cap - have), (0, 0), (0, 0))),
             pos=one_kv.pos,
         )
-    kv = jax.vmap(lambda pool, o: attn.insert_kv_pages(pool, o, page_ids))(
-        attn.PagedKVPool(cache.kv.k, cache.kv.v),
-        attn.KVCache(one_kv.k, one_kv.v, jnp.zeros((one_kv.k.shape[0], 1, cap),
-                                                   jnp.int32)))
+    if cache_update == "kernel":
+        from repro.kernels.paged_attention import ops as pa_ops
+
+        k, v = pa_ops.paged_insert(
+            cache.kv.k, cache.kv.v,
+            one_kv.k[:, 0].reshape(L, P, ps, Hkv, hd),
+            one_kv.v[:, 0].reshape(L, P, ps, Hkv, hd),
+            page_ids)
+        kv = attn.PagedKVPool(k=k, v=v)
+    else:
+        kv = jax.vmap(lambda pool, o: attn.insert_kv_pages(pool, o, page_ids))(
+            attn.PagedKVPool(cache.kv.k, cache.kv.v),
+            attn.KVCache(one_kv.k, one_kv.v,
+                         jnp.zeros((one_kv.k.shape[0], 1, cap), jnp.int32)))
     ssm_st = None
     if cache.ssm is not None:  # [L, B, ...]
         B = jax.tree.leaves(cache.ssm)[0].shape[1]

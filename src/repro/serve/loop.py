@@ -340,6 +340,13 @@ class PagedServeLoop(ServeLoop):
     (capacity a multiple of page_size; SWA rings page their `window`
     rows). Recurrent-only families (xLSTM) have no KV to page — use
     ``ServeLoop``; hybrid models keep dense per-slot SSM state rows.
+
+    ``cache_update`` adds a third value here: "kernel" dispatches decode
+    attention AND admission page writes to kernels/paged_attention (the
+    Pallas page-walk kernel with the fused pool write — no dense
+    [B, P*page_size, ...] gather, no full-pool selector); greedy streams
+    stay bit-identical to "mask" (tests/test_paged_kernel.py and the
+    serve_paged.py --smoke CI stage assert it).
     """
 
     def __init__(self, model: Model, params, *, n_slots: int = 8,
@@ -376,7 +383,9 @@ class PagedServeLoop(ServeLoop):
             return sample(logits, rid, nstep), new_cache
 
         self._decode = jax.jit(_decode, donate_argnums=(1,))
-        self._insert = jax.jit(insert_cache_pages, donate_argnums=(0,))
+        self._insert = jax.jit(
+            functools.partial(insert_cache_pages, cache_update=cache_update),
+            donate_argnums=(0,))
         self._build_prefill(model)
 
     def _init_cache(self):

@@ -161,7 +161,7 @@ def batch_specs(batch: Any, mesh: Mesh, batch_axes=("pod", "data")) -> Any:
     return jax.tree.map(one, batch)
 
 
-def paged_cache_specs(cache: Any, mesh: Mesh) -> Any:
+def paged_cache_specs(cache: Any, mesh: Mesh, cache_update: str = "mask") -> Any:
     """Paged decode-cache sharding: pool leaves are [L, n_pages, page_size,
     Hkv, hd]. Pages are slot-exclusive and independent, so the PAGE dim
     takes the data axes (each shard owns a contiguous page range; the
@@ -170,6 +170,14 @@ def paged_cache_specs(cache: Any, mesh: Mesh) -> Any:
     ([L, B, ...]) batch-shard like the contiguous cache. The page table
     itself ([B, P] int32, host-owned) is replicated — every shard needs
     every slot's page ids to resolve its gathers.
+
+    cache_update="kernel" keeps pool leaves REPLICATED: the Pallas
+    page-walk kernel addresses GLOBAL physical page ids through its
+    scalar-prefetch index maps, which a GSPMD page-dim (or kv-head) shard
+    would silently re-base per device — running the kernel inside a
+    shard_map with shard-local page tables is the open item (ROADMAP),
+    not something to half-do via annotations. SSM rows still batch-shard
+    (they never enter the kernel).
     """
     daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
     dn = _axis_size(mesh, *daxes)
@@ -179,6 +187,8 @@ def paged_cache_specs(cache: Any, mesh: Mesh) -> Any:
     def one(leaf):
         spec = [None] * leaf.ndim
         if leaf.ndim == 5:  # [L, n_pages, page_size, Hkv, hd] pool
+            if cache_update == "kernel":
+                return P(*spec)  # replicated (see docstring)
             if dn > 1 and leaf.shape[1] % dn == 0:
                 spec[1] = dspec
             if m > 1 and leaf.shape[3] % m == 0:

@@ -250,6 +250,7 @@ def make_slot_decode_bundle(model, mesh: Mesh, shape: ShapeConfig, *, unroll: in
 def make_paged_decode_bundle(model, mesh: Mesh, shape: ShapeConfig, *,
                              page_size: int = 16,
                              n_pages: Optional[int] = None,
+                             cache_update: str = "mask",
                              unroll: int = 1) -> StepBundle:
     """Paged-KV slot-masked decode (serve/PagedServeLoop's launch seam):
     the cache is a shared page pool ([L, n_pages, page_size, Hkv, hd])
@@ -258,6 +259,10 @@ def make_paged_decode_bundle(model, mesh: Mesh, shape: ShapeConfig, *,
     per-slot LOGICAL capacity; ``n_pages`` defaults to the contiguous
     worst case (B * ceil(seq_len / page_size)) — pass fewer pages to
     actually pool (the host allocator provides admission backpressure).
+
+    ``cache_update``: "mask" (default, shardable), "scatter", or
+    "kernel" (kernels/paged_attention page-walk kernel — the pool is
+    kept whole per device, see sharding.paged_cache_specs).
     """
     cfg: ArchConfig = model.config
     if model.paged_decode_step is None or model.init_paged_cache is None:
@@ -272,12 +277,14 @@ def make_paged_decode_bundle(model, mesh: Mesh, shape: ShapeConfig, *,
     def step(params, cache, page_table, token, pos, active):
         with logical_axis_rules(mesh):
             return model.paged_decode_step(params, cache, page_table, token,
-                                           pos, unroll=unroll, active=active)
+                                           pos, unroll=unroll,
+                                           cache_update=cache_update,
+                                           active=active)
 
     pstruct = params_struct(model)
     pshard = _ns(mesh, param_specs(pstruct, mesh))
     cstruct = jax.eval_shape(lambda: model.init_paged_cache(B, N, page_size))
-    cshard = _ns(mesh, paged_cache_specs(cstruct, mesh))
+    cshard = _ns(mesh, paged_cache_specs(cstruct, mesh, cache_update=cache_update))
     rep = _replicated(mesh)
     jit_fn = jax.jit(
         step,
@@ -315,7 +322,8 @@ def build_bundle(model, mesh: Mesh, shape: ShapeConfig, *, kind: Optional[str] =
             return make_paged_decode_bundle(
                 model, mesh, shape, unroll=kw.get("unroll", 1),
                 page_size=kw.get("page_size", 16),
-                n_pages=kw.get("n_pages"))
+                n_pages=kw.get("n_pages"),
+                cache_update=kw.get("cache_update", "mask"))
         # defaults flipped post-§Perf: mask update + length-sharded cache
         # (1600x collective reduction on qwen1.5-32b decode_32k)
         maker = make_slot_decode_bundle if kw.pop("slot_masked", False) \
