@@ -2,8 +2,8 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test test-fast collect test-sharded ci smoke bench-round-engine \
-	bench-controller-driver bench-sharded bench-serve bench-serve-paged \
-	bench-paged-kernel
+	bench-controller-driver bench-sharded bench-buffered bench-serve \
+	bench-serve-paged bench-paged-kernel
 
 test:
 	python -m pytest -x -q
@@ -32,6 +32,9 @@ bench-controller-driver:
 
 bench-sharded:
 	python benchmarks/sharded_round.py
+
+bench-buffered:
+	python benchmarks/buffered_round.py
 
 bench-serve:
 	python benchmarks/serve_loop.py

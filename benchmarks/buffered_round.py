@@ -1,0 +1,327 @@
+"""Buffered asynchronous rounds vs the synchronous oracle (DESIGN.md §13).
+
+Three sections, all appending JSONL rows to
+``experiments/buffered_round.jsonl``:
+
+  * ``parity``  — the acceptance gate: buffered (waves=1, instant
+    arrivals, grad_decay=1.0) must reproduce the sync TrainDriver's tau
+    trace EXACTLY and its params bitwise on a single device. The row
+    carries parity=exact and the process exits nonzero on any mismatch —
+    scripts/ci.sh runs ``--smoke`` as a fast-lane stage.
+  * ``staleness`` — convergence-vs-staleness grid: final train loss,
+    mean arrival age, and simulated time per commit for (waves,
+    grad_decay) against the sync barrier, whose per-round cost under the
+    SAME LatencyModel is max-over-cohort (the barrier waits for the
+    slowest client; the buffered engine only waits for the m fastest
+    arrivals), giving the round-throughput speedup column.
+  * ``hier100k`` — C=100k simulated clients under the hierarchical
+    pod->shard->client layout (8 client-axis shards when the process has
+    them): [C, N, d] client data built directly as arrays (bypassing the
+    per-dataset python loop), m=512 buffer slots, wall ms/commit +
+    dispatch accounting for the fold/step pipeline.
+
+Run standalone (forces 8 host devices BEFORE jax initializes):
+
+    PYTHONPATH=src python benchmarks/buffered_round.py [--smoke]
+
+or through the registry (``make bench-buffered`` /
+``python -m benchmarks.run --only buffered_round``).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":
+    # must precede ANY jax import: device count locks on first init
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+    )
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.core.buffered import (  # noqa: E402
+    BufferedConfig,
+    BufferedRoundEngine,
+    LatencyModel,
+)
+from repro.core.controller import ControllerConfig, ControllerCore  # noqa: E402
+from repro.core.driver import TrainDriver  # noqa: E402
+from repro.core.engine import EngineConfig, RoundEngine  # noqa: E402
+from repro.data.device import DeviceShards  # noqa: E402
+from repro.data.synthetic import (  # noqa: E402
+    Dataset,
+    binarize_even_odd,
+    make_classification,
+)
+from repro.launch.mesh import make_federated_mesh  # noqa: E402
+from repro.models.model import build_model, build_model_by_name  # noqa: E402
+
+TAU_MAX, BATCH, ETA = 4, 16, 0.05
+
+
+def _clients(C: int, n_per: int = 64):
+    orig = make_classification(C * n_per, (784,), 10, seed=1)
+    train = binarize_even_odd(orig)
+    return [Dataset(train.x[i::C], train.y[i::C]) for i in range(C)]
+
+
+def _engine(model, shards, C, cohort, mesh=None, mode="fedveca", donate=True):
+    return RoundEngine(
+        model.loss,
+        EngineConfig(mode=mode, eta=ETA, tau_max=TAU_MAX, batch_size=BATCH,
+                     cohort_size=cohort, donate=donate),
+        shards=shards,
+        num_clients=C,
+        controller=ControllerCore(
+            ControllerConfig(eta=ETA, tau_max=TAU_MAX), C,
+            adapt=(mode == "fedveca"), mesh=mesh,
+        ),
+        mesh=mesh,
+    )
+
+
+def _sync_barrier_time(eng, lm: LatencyModel, rounds: int, seed: int,
+                       C: int) -> float:
+    """Simulated cost of the synchronous barrier under the SAME latency
+    model: each round waits for its slowest cohort member."""
+    rng = np.random.default_rng(seed)
+    counts = np.zeros(C, np.int64)
+    t = 0.0
+    for _ in range(rounds):
+        c = eng.sample_cohort(rng)
+        ids = np.arange(C, dtype=np.int64) if c is None else np.asarray(c)
+        lat = lm.draw(ids, counts[ids])
+        counts[ids] += 1
+        t += float(lat.max())
+    return t
+
+
+# ---------------------------------------------------------------------------
+# section 1: parity gate (the CI smoke assertion)
+# ---------------------------------------------------------------------------
+
+
+def bench_parity(rows, json_rows, rounds=5):
+    C, cohort = 16, 8
+    model = build_model_by_name("svm-mnist")
+    ds = _clients(C, 32)
+    taus0 = np.full(C, 2, np.int32)
+
+    p = np.full(C, 1.0 / C, np.float32)
+    drv = TrainDriver(
+        _engine(model, DeviceShards.from_datasets(ds), C, cohort), p,
+        overlap=1, seed=0)
+    t0 = time.perf_counter()
+    log_s = drv.run(model.init(jax.random.PRNGKey(0)), rounds, taus0.copy())
+    sync_wall = time.perf_counter() - t0
+
+    buf = BufferedRoundEngine(
+        _engine(model, DeviceShards.from_datasets(ds), C, cohort), p,
+        BufferedConfig(waves=1, grad_decay=1.0,
+                       latency=LatencyModel("instant"), seed=0))
+    t0 = time.perf_counter()
+    log_b = buf.run(model.init(jax.random.PRNGKey(0)), rounds, taus0.copy())
+    buf_wall = time.perf_counter() - t0
+
+    tau_exact = all(
+        np.array_equal(rs["tau"], rb["tau"])
+        for rs, rb in zip(log_s.rows, log_b.rows)
+    )
+    params_bitwise = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(log_s.params),
+                        jax.tree.leaves(log_b.params))
+    )
+    if not (tau_exact and params_bitwise):
+        raise AssertionError(
+            f"buffered != sync in parity mode: tau_exact={tau_exact} "
+            f"params_bitwise={params_bitwise}"
+        )
+    jrow = dict(bench="buffered_round", section="parity", C=C, cohort=cohort,
+                rounds=rounds, tau_trace="exact", params="bitwise",
+                sync_wall_s=round(sync_wall, 3),
+                buffered_wall_s=round(buf_wall, 3))
+    json_rows.append(jrow)
+    print(json.dumps(jrow))
+    rows.append(dict(name="buffered_round/parity",
+                     us_per_call=1e6 * buf_wall / rounds,
+                     derived="tau=exact|params=bitwise"))
+
+
+# ---------------------------------------------------------------------------
+# section 2: convergence vs staleness against the sync oracle
+# ---------------------------------------------------------------------------
+
+
+def bench_staleness(rows, json_rows, rounds=12):
+    C, cohort = 64, 16
+    model = build_model_by_name("svm-mnist")
+    ds = _clients(C, 32)
+    p = np.full(C, 1.0 / C, np.float32)
+    taus0 = np.full(C, 2, np.int32)
+
+    drv = TrainDriver(_engine(model, DeviceShards.from_datasets(ds), C,
+                              cohort), p, overlap=1, seed=0)
+    log_s = drv.run(model.init(jax.random.PRNGKey(0)), rounds, taus0.copy())
+    sync_loss = float(log_s.rows[-1]["train_loss"])
+
+    lm_probe = LatencyModel("exp", scale=1.0, seed=7)
+    sync_time = _sync_barrier_time(
+        _engine(model, DeviceShards.from_datasets(ds), C, cohort),
+        lm_probe, rounds, seed=0, C=C)
+
+    jrow = dict(bench="buffered_round", section="staleness", series="sync",
+                C=C, cohort=cohort, rounds=rounds, waves=0, grad_decay=1.0,
+                final_loss=round(sync_loss, 6), mean_age=0.0,
+                sim_time=round(sync_time, 3),
+                sim_time_per_step=round(sync_time / rounds, 4), speedup=1.0)
+    json_rows.append(jrow)
+    print(json.dumps(jrow))
+    rows.append(dict(name=f"buffered_round/staleness/sync/C{C}",
+                     us_per_call=0.0,
+                     derived=f"loss={sync_loss:.4f}|"
+                             f"simt_per_round={sync_time / rounds:.2f}"))
+
+    for waves, decay in ((1, 1.0), (2, 0.9), (4, 0.9), (4, 0.5)):
+        buf = BufferedRoundEngine(
+            _engine(model, DeviceShards.from_datasets(ds), C, cohort), p,
+            BufferedConfig(waves=waves, grad_decay=decay,
+                           latency=LatencyModel("exp", scale=1.0, seed=7),
+                           seed=0))
+        log_b = buf.run(model.init(jax.random.PRNGKey(0)), rounds,
+                        taus0.copy())
+        loss = float(log_b.rows[-1]["train_loss"])
+        mean_age = float(np.mean([r["mean_age"] for r in log_b.rows]))
+        simt = buf.sim_time
+        speedup = sync_time / simt if simt > 0 else float("inf")
+        jrow = dict(bench="buffered_round", section="staleness",
+                    series="buffered", C=C, cohort=cohort, rounds=rounds,
+                    waves=waves, grad_decay=decay,
+                    final_loss=round(loss, 6), mean_age=round(mean_age, 3),
+                    sim_time=round(simt, 3),
+                    sim_time_per_step=round(simt / rounds, 4),
+                    speedup=round(speedup, 3),
+                    loss_gap_vs_sync=round(loss - sync_loss, 6))
+        json_rows.append(jrow)
+        print(json.dumps(jrow))
+        rows.append(dict(
+            name=f"buffered_round/staleness/W{waves}_d{decay}/C{C}",
+            us_per_call=0.0,
+            derived=f"loss={loss:.4f}|age={mean_age:.2f}|"
+                    f"speedup={speedup:.2f}x"))
+
+
+# ---------------------------------------------------------------------------
+# section 3: C=100k hierarchical pod->shard->client aggregation
+# ---------------------------------------------------------------------------
+
+
+def bench_hier(rows, json_rows, C=100_000, m=512, steps=3, waves=2,
+               dim=32, n_per=8):
+    n_dev = len(jax.devices())
+    shards_k = 8 if n_dev >= 8 else 1
+    mesh = make_federated_mesh(shards_k) if shards_k > 1 else None
+    if C % shards_k:
+        C += shards_k - C % shards_k  # keep the client axis shardable
+
+    # [C, N, d] arrays built directly — the per-dataset python loop in
+    # from_datasets is O(C) host work that would dwarf the benchmark
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((C, n_per, dim), np.float32)
+    y = (rng.random((C, n_per)) < 0.5).astype(np.int32)
+    sizes = np.full(C, n_per, np.int32)
+    put = None
+    if mesh is not None:
+        from repro.sharding.api import client_sharding
+
+        def put(a):
+            return jax.device_put(a, client_sharding(mesh, np.ndim(a)))
+    else:
+        import jax.numpy as jnp
+
+        put = jnp.asarray
+    shards = DeviceShards(put(x), put(y), put(sizes), mesh=mesh)
+
+    cfg = dataclasses.replace(get_arch("svm-mnist"), input_shape=(dim,))
+    model = build_model(cfg)
+    p = np.full(C, 1.0 / C, np.float32)
+
+    buf = BufferedRoundEngine(
+        _engine(model, shards, C, m, mesh=mesh), p,
+        BufferedConfig(waves=waves, grad_decay=0.9,
+                       latency=LatencyModel("exp", scale=1.0, seed=3),
+                       seed=0))
+    taus0 = np.full(C, 2, np.int32)
+    params = model.init(jax.random.PRNGKey(0))
+    buf.run(params, 1, taus0.copy())  # compile + warmup
+    t0 = time.perf_counter()
+    params = model.init(jax.random.PRNGKey(0))
+    log = buf.run(params, steps, taus0.copy())
+    wall = time.perf_counter() - t0
+    per = 1e3 * wall / steps
+    jrow = dict(bench="buffered_round", section="hier100k", C=C, m=m,
+                waves=waves, data_shards=shards_k, steps=steps,
+                wall_ms_per_step=round(per, 2),
+                dispatch_ms_per_step=round(1e3 * buf.dispatch_s / steps, 2),
+                readback_ms_per_step=round(1e3 * buf.host_blocked_s / steps, 2),
+                wave_dispatches=buf.wave_dispatches,
+                fold_dispatches=buf.fold_dispatches,
+                mean_age=round(float(np.mean([r["mean_age"]
+                                              for r in log.rows])), 3),
+                final_loss=round(float(log.rows[-1]["train_loss"]), 6))
+    json_rows.append(jrow)
+    print(json.dumps(jrow))
+    rows.append(dict(name=f"buffered_round/hier/C{C}/m{m}/shards{shards_k}",
+                     us_per_call=1e3 * per,
+                     derived=f"dispatch_ms={1e3 * buf.dispatch_s / steps:.1f}|"
+                             f"folds={buf.fold_dispatches}"))
+
+
+# ---------------------------------------------------------------------------
+# registry entrypoint
+# ---------------------------------------------------------------------------
+
+
+def run(scale=None, out_rows: list = None, csv_dir=None, *, smoke=False,
+        json_path=None):
+    rows = out_rows if out_rows is not None else []
+    json_rows: list = []
+    bench_parity(rows, json_rows)
+    if smoke:
+        # fast lane: parity gate + a tiny staleness probe only
+        bench_staleness(rows, json_rows, rounds=4)
+    else:
+        bench_staleness(rows, json_rows, rounds=12)
+        bench_hier(rows, json_rows)
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "a") as f:
+            for jrow in json_rows:
+                f.write(json.dumps(jrow) + "\n")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: parity gate + tiny staleness probe")
+    ap.add_argument("--json", default="experiments/buffered_round.jsonl")
+    args = ap.parse_args()
+    run(smoke=args.smoke, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (  # noqa: E402
     beyond_paper,
+    buffered_round,
     controller_driver,
     fig3_loss_accuracy,
     fig4_premise,
@@ -46,6 +47,7 @@ BENCHES = {
     "round_engine": round_engine.run,
     "controller_driver": controller_driver.run,
     "sharded_round": sharded_round.run,
+    "buffered_round": buffered_round.run,
     "serve_loop": serve_loop.run,
     "serve_paged": serve_paged.run,
 }

@@ -24,6 +24,11 @@ if [ "$MODE" = fast ]; then
   # asserts paged==contiguous greedy streams for BOTH cache_update
   # paths (mask and kernel) on every CI run
   python benchmarks/serve_paged.py --smoke
+  echo "== smoke: benchmarks/buffered_round.py (buffered==sync parity) =="
+  # the buffered-async acceptance gate: waves=1 + instant arrivals +
+  # grad_decay=1.0 must reproduce the sync TrainDriver's tau trace
+  # exactly and its params bitwise — any drift exits nonzero here
+  python benchmarks/buffered_round.py --smoke
   echo "CI OK (fast lane)"
   exit 0
 fi
@@ -44,6 +49,8 @@ if [ "$MODE" = "all" ]; then
   python benchmarks/controller_driver.py --smoke
   echo "== smoke: benchmarks/sharded_round.py =="
   python benchmarks/sharded_round.py --smoke
+  echo "== smoke: benchmarks/buffered_round.py =="
+  python benchmarks/buffered_round.py --smoke
   echo "== smoke: benchmarks/serve_loop.py =="
   python benchmarks/serve_loop.py --smoke
   echo "== smoke: benchmarks/serve_paged.py =="

@@ -1,0 +1,506 @@
+"""BufferedRoundEngine: FedBuff-style asynchronous federated rounds.
+
+The synchronous round is a barrier — sample a cohort, wait for all m
+clients, step — so round latency is gated by the slowest client. This
+module removes the barrier with the serving plane's own idiom
+(``core/scheduler.AdmissionScheduler``, DESIGN.md §13): client updates
+stream in continuously, each arrival is ADMITTED into one of m fixed
+buffer slots, FOLDED into a device-resident aggregate by a masked
+elementwise select, and every m arrivals the server COMMITS one global
+model + controller step over the buffer, weighting each contribution by
+``grad_decay^age`` (age = global steps elapsed since the contributing
+wave was dispatched — the staleness of the params version the client
+computed against).
+
+**Waves.** Clients dispatched between two consecutive commits all see the
+same params/taus version, so each cohort runs as ONE vmapped device
+program (``RoundEngine``'s wave_update — the client half of the fused
+round: same tau clip, same per-client ``fold_in`` minibatch streams, same
+masked-tau scan). ``waves`` cohorts are kept in flight; a simulated
+per-client latency (``LatencyModel``) spreads each wave's m arrivals over
+time, so a commit generally mixes rows from several params versions.
+
+**Slot alignment.** Buffer slot j only ever accepts wave row j. The fold
+is then a pure per-leaf ``where(mask, wave, buf)`` — no gather, no
+scatter — so under a federated mesh the buffer shards exactly like the
+wave outputs over ('pod','data') and every fold is shard-local; the only
+cross-shard communication is the weighted reduce inside the commit
+(GSPMD partial sums + all-reduce), i.e. psum at step boundaries only.
+An arrival whose slot is still occupied waits in that slot's FIFO
+(admission backpressure, same as the paged serve loop's page pool); each
+wave contributes exactly one candidate per slot, so the buffer always
+fills and the loop cannot deadlock.
+
+**Parity oracle.** With instant arrivals, ``waves=1`` and
+``grad_decay=1.0`` the buffered engine IS the synchronous engine: wave k
+fills the whole buffer in cohort order and the commit reproduces
+``RoundEngine.run_fused`` — same rng/key discipline as ``TrainDriver``,
+same tau trace, same params (tests/test_buffered_round.py pins both).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time
+from collections import deque
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import RoundEngine, _quiet_donation
+from repro.core.fedveca import RoundStats
+from repro.core.scheduler import AdmissionScheduler
+from repro.core.strategy import make_reduce
+from repro.core.tree import tree_axpy, tree_sqnorm
+from repro.metrics.logger import RunLogger
+
+LATENCY_KINDS = ("instant", "uniform", "exp", "hetero")
+
+
+@dataclasses.dataclass
+class LatencyModel:
+    """Simulated client round-trip times (in scheduler ticks, float).
+
+    Draws are keyed per (client, dispatch-count) via nested ``fold_in`` —
+    the same stream discipline as the serve sampler's per-request
+    ``fold_in(rid)/fold_in(nstep)`` — so a client's latency trace depends
+    only on (seed, client id, how many times IT was dispatched), never on
+    which other clients share its cohort. Traces are therefore invariant
+    to cohort composition (tested).
+
+    kinds:
+      * ``instant``: always 0 — the sync-parity mode;
+      * ``uniform``: scale * U[0, 2)  (mean ``scale``);
+      * ``exp``:     scale * Exp(1)   (heavy-ish tail);
+      * ``hetero``:  f_i * scale * Exp(1) with a PERSISTENT per-client
+        speed factor f_i = exp(spread * N_i(0,1)) — lognormal system
+        heterogeneity on top of per-dispatch jitter (f_i is keyed by
+        client id only, so a slow client is slow every round).
+    """
+
+    kind: str = "instant"
+    scale: float = 1.0
+    spread: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in LATENCY_KINDS:
+            raise ValueError(
+                f"unknown latency kind {self.kind!r}; valid: {LATENCY_KINDS}"
+            )
+        key = jax.random.PRNGKey(self.seed)
+        kind, scale, spread = self.kind, float(self.scale), float(self.spread)
+
+        def draw(ids, counts):
+            def one(i, c):
+                # stream tag 0: per-dispatch jitter; tag 1: per-client factor
+                k = jax.random.fold_in(
+                    jax.random.fold_in(jax.random.fold_in(key, 0), i), c
+                )
+                u = jax.random.uniform(k)
+                if kind == "uniform":
+                    return scale * 2.0 * u
+                e = scale * -jnp.log1p(-u)  # Exp(1) via inverse CDF
+                if kind == "exp":
+                    return e
+                kf = jax.random.fold_in(jax.random.fold_in(key, 1), i)
+                return jnp.exp(spread * jax.random.normal(kf)) * e
+
+            return jax.vmap(one)(ids, counts)
+
+        self._draw = None if kind == "instant" else jax.jit(draw)
+
+    def draw(self, ids: np.ndarray, counts: np.ndarray) -> np.ndarray:
+        """Latency for each of ``ids`` on its ``counts[i]``-th dispatch."""
+        if self._draw is None:
+            return np.zeros(len(ids), np.float64)
+        return np.asarray(
+            self._draw(jnp.asarray(ids, jnp.int32),
+                       jnp.asarray(counts, jnp.int32)),
+            np.float64,
+        )
+
+
+@dataclasses.dataclass
+class BufferedConfig:
+    """Knobs of the buffered scheduler (the engine's EngineConfig still
+    owns the round math: mode, eta, tau_max, cohort_size = buffer size)."""
+
+    waves: int = 1  # cohorts in flight; 1 + instant arrivals = sync parity
+    grad_decay: float = 1.0  # staleness weight decay^age on arrivals
+    latency: LatencyModel = dataclasses.field(default_factory=LatencyModel)
+    seed: int = 0
+    overlap: int = 1  # deferred diag readback depth (TrainDriver discipline)
+
+
+class BufferedRoundEngine(AdmissionScheduler):
+    """Buffered asynchronous training over a RoundEngine's round math.
+
+    The engine must be built with ``controller=ControllerCore`` and the
+    device data path (``shards=``); scaffold modes keep per-client server
+    state the buffered fold does not model and are rejected. ``p`` is the
+    full-C client weight vector. One scheduler tick = one global step.
+    """
+
+    def __init__(
+        self,
+        engine: RoundEngine,
+        p: np.ndarray,
+        bcfg: Optional[BufferedConfig] = None,
+        *,
+        mode: Optional[str] = None,
+        eval_fn: Optional[Callable] = None,
+        eval_every: int = 1,
+        on_row: Optional[Callable[[Dict[str, Any]], None]] = None,
+    ):
+        super().__init__()
+        if engine.controller is None:
+            raise ValueError("BufferedRoundEngine needs an engine built "
+                             "with controller=ControllerCore")
+        if engine.shards is None:
+            raise ValueError("BufferedRoundEngine needs the device data "
+                             "path (build the engine with shards=)")
+        if engine._strategy.uses_scaffold:
+            raise ValueError(f"mode {engine.cfg.mode!r} keeps per-client "
+                             "server state; buffered rounds don't support it")
+        self.engine = engine
+        self.bcfg = bcfg or BufferedConfig()
+        if self.bcfg.waves < 1:
+            raise ValueError(f"waves must be >= 1, got {self.bcfg.waves}")
+        if not 0.0 < self.bcfg.grad_decay <= 1.0:
+            raise ValueError(
+                f"grad_decay must be in (0, 1], got {self.bcfg.grad_decay}"
+            )
+        C = engine.num_clients
+        m = engine.cfg.cohort_size
+        self.m = C if (m is None or m >= C) else int(m)
+        self.full = self.m >= C  # full participation: p already sums to 1
+        if engine.sharded and self.m % engine._n_shards:
+            raise ValueError(
+                f"buffered buffer size m={self.m} must divide the "
+                f"{engine._n_shards} client-axis shards (slot j is owned by "
+                "the shard that owns wave row j)"
+            )
+        self.p = jnp.asarray(p, jnp.float32)
+        self.mode = mode or engine.cfg.mode
+        self.eval_fn = eval_fn
+        self.eval_every = eval_every
+        self.on_row = on_row
+        self._step_jit = self._make_step()
+        self._fold_jit = jax.jit(self._make_fold(), donate_argnums=(0,))
+        self.host_blocked_s = 0.0
+        self.dispatch_s = 0.0
+        self.tau_all = 0
+
+    # -- compiled programs ---------------------------------------------------
+    def _make_fold(self):
+        m = self.m
+
+        def fold(buf, wave, mask, ids, age):
+            """Masked elementwise select of one wave's rows into the buffer
+            — slot j always takes wave row j, so there is no gather and the
+            fold stays shard-local under a client-sharded buffer."""
+
+            def sel(b, w):
+                return jnp.where(mask.reshape((m,) + (1,) * (b.ndim - 1)),
+                                 w, b)
+
+            return dict(
+                cum_g=jax.tree.map(sel, buf["cum_g"], wave["cum_g"]),
+                g0=jax.tree.map(sel, buf["g0"], wave["g0"]),
+                loss0=jnp.where(mask, wave["loss0"], buf["loss0"]),
+                beta=jnp.where(mask, wave["beta"], buf["beta"]),
+                delta=jnp.where(mask, wave["delta"], buf["delta"]),
+                tau=jnp.where(mask, wave["tau"], buf["tau"]),
+                ids=jnp.where(mask, ids, buf["ids"]),
+                age=jnp.where(mask, age, buf["age"]),
+            )
+
+        return fold
+
+    def _make_step(self):
+        eng = self.engine
+        cfg = eng.cfg
+        strategy = eng._strategy
+        # sharded commits run under GSPMD (outside shard_map): the fallback
+        # tensordot over the client-sharded leading axis lowers to
+        # shard-local partial sums + one all-reduce — psum at step
+        # boundaries only. Single-device keeps the engine's aggregator
+        # (Pallas vecavg included).
+        reduce = make_reduce("fallback") if eng.sharded else eng._reduce
+        decay = float(self.bcfg.grad_decay)
+        use_decay = decay != 1.0
+        renorm = use_decay or not self.full
+
+        def step(params, cstate, buf, p):
+            taus_used = jnp.clip(cstate.taus, 1, cfg.tau_max)
+            w = p[buf["ids"]]
+            if use_decay:
+                w = w * jnp.power(jnp.float32(decay), buf["age"])
+            pw = w / jnp.sum(w) if renorm else w
+            tau_f = buf["tau"].astype(jnp.float32)
+            delta_w = strategy.server_delta(
+                dict(cum_g=buf["cum_g"]), params, tau_f, pw, cfg.eta, reduce
+            )
+            new_params = tree_axpy(1.0, delta_w, params)
+            global_grad, g0_sqn = reduce(buf["g0"], pw, 1.0)
+            stats = RoundStats(
+                loss0=buf["loss0"],
+                beta=buf["beta"],
+                delta=buf["delta"],
+                g0_sqnorm=g0_sqn,
+                tau=buf["tau"],
+                tau_k=jnp.sum(pw * tau_f),
+                global_grad=global_grad,
+                update_sqnorm=tree_sqnorm(delta_w),
+                params_sqnorm=tree_sqnorm(params),
+                global_grad_sqnorm=tree_sqnorm(global_grad),
+            )
+            # Theorem-2 clamp + Eq. 15 run per-commit on the BUFFERED tau
+            # statistics: staleness-weighted (beta, delta) scattered at the
+            # buffer's member ids, exactly as the sync fused step does
+            new_cstate, diag = eng.controller.step(
+                cstate, stats, buf["ids"], taus_used
+            )
+            diag = dict(
+                diag,
+                train_loss=jnp.sum(pw * stats.loss0),
+                tau_k=stats.tau_k,
+                tau_round_sum=jnp.sum(buf["tau"]),
+                update_sqnorm=stats.update_sqnorm,
+                mean_age=jnp.mean(buf["age"]),
+                max_age=jnp.max(buf["age"]),
+            )
+            return new_params, new_cstate, diag
+
+        donate = (0, 1) if cfg.donate else ()  # params, cstate — never buf
+        return jax.jit(step, donate_argnums=donate)
+
+    def _init_buffer(self, params):
+        eng, m = self.engine, self.m
+        put = lambda x: x  # noqa: E731
+        if eng.sharded:
+            from repro.sharding.api import client_sharding
+
+            put = lambda x: jax.device_put(  # noqa: E731
+                x, client_sharding(eng.mesh, x.ndim)
+            )
+
+        def rows(x, dtype):
+            return put(jnp.zeros((m,) + x.shape, dtype))
+
+        sd = eng.cfg.stat_dtype
+        return dict(
+            cum_g=jax.tree.map(lambda x: rows(x, sd), params),
+            g0=jax.tree.map(lambda x: rows(x, sd), params),
+            loss0=put(jnp.zeros((m,), jnp.float32)),
+            beta=put(jnp.zeros((m,), jnp.float32)),
+            delta=put(jnp.zeros((m,), jnp.float32)),
+            tau=put(jnp.ones((m,), jnp.int32)),
+            ids=put(jnp.zeros((m,), jnp.int32)),
+            age=put(jnp.zeros((m,), jnp.float32)),
+        )
+
+    # -- wave dispatch + arrival simulation ---------------------------------
+    def _dispatch_wave(self) -> None:
+        """Sample a cohort against the CURRENT (params, taus) version and
+        dispatch its vmapped local updates; schedule each row's arrival at
+        now + latency(client, dispatch-count)."""
+        eng = self.engine
+        cohort = eng.sample_cohort(self._rng)
+        ids = (np.arange(self.m, dtype=np.int32) if cohort is None
+               else np.asarray(cohort, np.int32))
+        self._key, sub = jax.random.split(self._key)
+        t0 = time.perf_counter()
+        outs = eng._wave(
+            self._params, self._data, sub, self._cstate.taus,
+            self._cstate.prev_grad_sqnorm, eng._prep_cohort(ids),
+        )
+        self.dispatch_s += time.perf_counter() - t0
+        self.wave_dispatches += 1
+        w = self._next_wave
+        self._next_wave += 1
+        self._waves[w] = dict(version=self._version, cohort=ids, outs=outs,
+                              remaining=self.m)
+        lat = self.bcfg.latency.draw(ids, self._counts[ids])
+        self._counts[ids] += 1
+        for i in range(self.m):
+            heapq.heappush(
+                self._events, (self._now + float(lat[i]), next(self._seq),
+                               w, i)
+            )
+
+    # -- AdmissionScheduler hooks -------------------------------------------
+    def _admit(self) -> None:
+        """Claim arrivals into free buffer slots. Slots freed by the commit
+        first re-admit from their FIFO (oldest waiting arrival — FIFO
+        backpressure, like the paged pool); then the event heap advances
+        simulated time until the buffer is full or arrivals run out."""
+        for i in range(self.m):
+            if self._slot_from[i] is None and self._fifo[i]:
+                self._slot_from[i] = self._fifo[i].popleft()
+                self._filled += 1
+        while self._filled < self.m and self._events:
+            t, _, w, i = heapq.heappop(self._events)
+            self._now = max(self._now, t)
+            if self._slot_from[i] is None:
+                self._slot_from[i] = w
+                self._filled += 1
+            else:
+                self._fifo[i].append(w)
+
+    def _has_work(self) -> bool:
+        return self._filled == self.m
+
+    def _pending(self) -> bool:
+        return bool(self._events)
+
+    def _fold(self):
+        """Fold every claimed arrival, one masked dispatch per contributing
+        wave (all of a wave's claimed rows share one age)."""
+        by_wave: Dict[int, list] = {}
+        for i, w in enumerate(self._slot_from):
+            by_wave.setdefault(w, []).append(i)
+        t0 = time.perf_counter()
+        for w in sorted(by_wave):
+            slots = by_wave[w]
+            wave = self._waves[w]
+            mask = np.zeros(self.m, bool)
+            mask[slots] = True
+            self._buf_ids[slots] = wave["cohort"][slots]
+            with _quiet_donation():
+                self._buf = self._fold_jit(
+                    self._buf, wave["outs"], jnp.asarray(mask),
+                    jnp.asarray(wave["cohort"], jnp.int32),
+                    jnp.float32(self._version - wave["version"]),
+                )
+            self.fold_dispatches += 1
+            wave["remaining"] -= len(slots)
+            if wave["remaining"] == 0:  # retire: free the wave's outputs
+                del self._waves[w]
+        self.dispatch_s += time.perf_counter() - t0
+        return None
+
+    def _commit(self, _folded) -> None:
+        """One global model + controller step over the full buffer; free
+        every slot (the trailing admit re-fills them from the FIFOs) and
+        replace the consumed wave's worth of arrivals with a new dispatch
+        against the FRESH params/taus."""
+        t0 = time.perf_counter()
+        with _quiet_donation():
+            self._params, self._cstate, diag = self._step_jit(
+                self._params, self._cstate, self._buf, self.p
+            )
+        self.dispatch_s += time.perf_counter() - t0
+        k = self._version
+        self._version += 1
+        self._slot_from = [None] * self.m
+        self._filled = 0
+        ev = None
+        if self.eval_fn and (
+            (k % self.eval_every) == 0 or k == self._total_steps - 1
+        ):
+            ev = self.eval_fn(self._params)
+        self._pend.append((k, np.sort(self._buf_ids.copy()), diag, ev))
+        while len(self._pend) > self.bcfg.overlap:
+            self._finalize(self._pend.popleft())
+        if self.wave_dispatches < self._total_steps:
+            self._dispatch_wave()
+
+    # -- driver loop ---------------------------------------------------------
+    def run(self, params, steps: int, taus: np.ndarray,
+            logger: Optional[RunLogger] = None) -> RunLogger:
+        """Run ``steps`` buffered commits from ``params``/``taus``; returns
+        the logger with ``.params`` and ``.tau_all`` (TrainDriver contract:
+        same rng/key discipline, one row per commit)."""
+        eng = self.engine
+        log = logger or RunLogger(None, name=self.mode)
+        self._rng = np.random.default_rng(self.bcfg.seed)
+        self._key = jax.random.PRNGKey(self.bcfg.seed)
+        self._cstate = eng.init_controller_state(params, taus)
+        self._params = params
+        self._data = eng.shards.tree()
+        self._buf = self._init_buffer(params)
+        self._buf_ids = np.zeros(self.m, np.int32)
+        self._counts = np.zeros(eng.num_clients, np.int64)
+        self._waves: Dict[int, dict] = {}
+        self._events: list = []
+        self._seq = itertools.count()
+        self._fifo = [deque() for _ in range(self.m)]
+        self._slot_from = [None] * self.m
+        self._filled = 0
+        self._now = 0.0
+        self._version = 0
+        self._next_wave = 0
+        self._total_steps = steps
+        self._pend: deque = deque()
+        self._log = log
+        self.t = 0
+        self.wave_dispatches = 0
+        self.fold_dispatches = 0
+        self.host_blocked_s = 0.0
+        self.dispatch_s = 0.0
+        self.tau_all = 0
+
+        for _ in range(min(self.bcfg.waves, steps)):
+            self._dispatch_wave()
+        while self._version < steps:
+            before = self._version
+            self.tick()
+            if self._version == before:
+                raise RuntimeError(
+                    "buffered scheduler made no progress: buffer cannot "
+                    "fill (no arrivals left?)"
+                )
+        while self._pend:
+            self._finalize(self._pend.popleft())
+
+        t0 = time.perf_counter()
+        jax.block_until_ready(self._params)
+        self.host_blocked_s += time.perf_counter() - t0
+        log.params = self._params  # type: ignore[attr-defined]
+        log.tau_all = self.tau_all  # type: ignore[attr-defined]
+        log.close()
+        return log
+
+    @property
+    def sim_time(self) -> float:
+        """Simulated time (ticks) consumed so far — the buffered analogue
+        of sum-of-round-latencies for the sync barrier."""
+        return self._now
+
+    # -- deferred device->host sync + logging (TrainDriver row contract) ----
+    def _finalize(self, entry) -> None:
+        k, cohort, diag, ev = entry
+        t0 = time.perf_counter()
+        host = {name: np.asarray(v) for name, v in diag.items()}  # blocks
+        ev_host = None if ev is None else {n: float(v) for n, v in ev.items()}
+        self.host_blocked_s += time.perf_counter() - t0
+
+        self.tau_all += int(host["tau_round_sum"])
+        row: Dict[str, Any] = dict(
+            round=k,
+            mode=self.mode,
+            train_loss=float(host["train_loss"]),
+            tau=host["tau_next"].copy(),
+            tau_k=float(host["tau_k"]),
+            tau_all=self.tau_all,
+            beta=host["beta"],
+            delta=host["delta"],
+            cohort=cohort,
+            A=host["A"],
+            L=float(host["L"]),
+            premise=float(host["premise"]),
+            alpha_k=float(host["alpha_k"]),
+            mean_age=float(host["mean_age"]),
+            max_age=float(host["max_age"]),
+            sim_time=self._now,
+        )
+        if ev_host:
+            row.update(ev_host)
+        self._log.log(**row)
+        if self.on_row:
+            self.on_row(row)

@@ -141,12 +141,9 @@ class RoundEngine:
                 raise ValueError("sharded engine needs num_clients or shards=")
             validate_client_count(mesh, C)
             self._local_C = C // self._n_shards
-            m = cfg.cohort_size
-            if m is not None and m < C and m % self._n_shards:
-                raise ValueError(
-                    f"cohort_size={m} must be a multiple of the "
-                    f"{self._n_shards} client-axis shards (per-shard cohorts)"
-                )
+            # cohort_size need NOT divide the shard count: sample_cohort
+            # degrades to an imbalanced-but-valid per-shard split (warned)
+            # and _prep_cohort sentinel-pads the short rows
             if shards is not None and shards.mesh is not mesh:
                 # place the data ONCE at build time, not per dispatch
                 from repro.sharding.api import client_sharding
@@ -190,9 +187,20 @@ class RoundEngine:
             gids = None  # matching GLOBAL client ids (key folding)
             if cohort is not None:
                 gids = cohort.reshape(-1)
-                local = gids if offset is None else gids - offset
+                if offset is None:
+                    local = gids
+                    pw_l = p[local]
+                else:
+                    # imbalanced stratified cohorts sentinel-pad short rows
+                    # with id C: pads localize to C_loc (out of range, so
+                    # scatters drop them / gathers clamp) and weigh 0
+                    valid = gids < jnp.int32(self.num_clients)
+                    local = jnp.where(valid, gids - offset,
+                                      jnp.int32(self._local_C))
+                    pw_l = jnp.where(valid, p[jnp.minimum(local,
+                                                          self._local_C - 1)],
+                                     jnp.float32(0.0))
                 tau = tau[local]
-                pw_l = p[local]
                 norm = jnp.sum(pw_l)  # partial participation: renormalize
                 if offset is not None:
                     norm = jax.lax.psum(norm, self._client_axes)
@@ -305,13 +313,20 @@ class RoundEngine:
             new_cstate, diag = self.controller.step(
                 cstate, stats, members, taus_full
             )
+            if cohort is None:
+                tau_round_sum = jnp.sum(taus_full)
+            else:
+                # sentinel-padded entries (id == C) must not clamp-gather
+                # the last client's tau into the sum
+                valid = cohort_flat < C
+                tau_round_sum = jnp.sum(jnp.where(
+                    valid, taus_full[jnp.minimum(cohort_flat, C - 1)], 0
+                ))
             diag = dict(
                 diag,
                 train_loss=jnp.sum(pw * stats.loss0),
                 tau_k=stats.tau_k,
-                tau_round_sum=jnp.sum(
-                    taus_full if cohort is None else taus_full[cohort_flat]
-                ),
+                tau_round_sum=tau_round_sum,
                 update_sqnorm=stats.update_sqnorm,
             )
             return new_params, new_cstate, new_scaffold, diag
@@ -351,6 +366,71 @@ class RoundEngine:
                         delta=outs["delta"], loss0=outs["loss0"])
 
         self._client_update_many = jax.jit(client_update_many)
+
+        def wave_update(params, data, key, taus, gprev_sqnorm, cohort,
+                        offset=None):
+            """One dispatch wave of the buffered engine (core/buffered.py):
+            the cohort's Alg. 2 local updates against ONE params version,
+            returning per-slot gradient accumulators + stats. This is exactly
+            the client half of the fused round — same clip, same per-client
+            fold_in sampling, same masked-tau vmap — with the server
+            fold/step deferred to the buffered scheduler, so instant
+            arrivals reproduce the synchronous round exactly."""
+            taus_full = jnp.clip(taus, 1, cfg.tau_max)
+            gids = cohort.reshape(-1)
+            local = gids if offset is None else gids - offset
+            tau = taus_full[local]
+            batches = self.shards.sample(
+                data, key, cfg.tau_max, cfg.batch_size, local, ids_global=gids
+            )
+            with self._context():
+                M = gids.shape[0]
+                zeros = tree_zeros_like(params)
+                zrows = jax.tree.map(
+                    lambda x: jnp.zeros((M,) + x.shape, x.dtype), params
+                )
+                outs = jax.vmap(
+                    self._local, in_axes=(None, 0, 0, None, None, 0)
+                )(params, batches, tau, gprev_sqnorm, zeros, zrows)
+            # raw accumulators, NOT normalized: the buffered commit routes
+            # through strategy.server_delta exactly like the sync round, so
+            # every mode's op sequence (and bitwise result) is preserved
+            return dict(cum_g=outs["cum_g"], g0=outs["g0"],
+                        loss0=outs["loss0"], beta=outs["beta"],
+                        delta=outs["delta"], tau=tau)
+
+        def dispatch_wave(params, data, key, taus, gprev_sqnorm, cohort):
+            if not self.sharded:
+                return wave_update(params, data, key, taus, gprev_sqnorm,
+                                   cohort)
+            cspec = P(self._client_axes if len(self._client_axes) > 1
+                      else self._client_axes[0])
+            rep = P()
+
+            def sharded_wave(params, data, key, taus, gprev_sqnorm, cohort):
+                sidx = jnp.int32(0)
+                for a in self._client_axes:
+                    sidx = sidx * mesh.shape[a] + jax.lax.axis_index(a)
+                return wave_update(params, data, key, taus, gprev_sqnorm,
+                                   cohort, offset=sidx * self._local_C)
+
+            in_specs = (
+                jax.tree.map(lambda _: rep, params),
+                jax.tree.map(lambda _: cspec, data),
+                rep, cspec, rep, cspec,
+            )
+            out_specs = dict(
+                cum_g=jax.tree.map(lambda _: cspec, params),
+                g0=jax.tree.map(lambda _: cspec, params),
+                loss0=cspec, beta=cspec, delta=cspec, tau=cspec,
+            )
+            return shard_map(
+                sharded_wave, mesh=mesh, in_specs=in_specs,
+                out_specs=out_specs, check_rep=False,
+            )(params, data, key, taus, gprev_sqnorm, cohort)
+
+        # buffered wave dispatch needs the device data path (shards)
+        self._wave = jax.jit(dispatch_wave) if shards is not None else None
 
         def server_aggregate(params, G_stacked, tau, p):
             tau_f = tau.astype(jnp.float32)
@@ -411,31 +491,36 @@ class RoundEngine:
 
     def _prep_cohort(self, cohort):
         """Host-side cohort normalization. Single-device: int32 [m].
-        Sharded: [n_shards, m/n_shards] with row s holding ONLY shard s's
-        client ids — validated here so the device program never needs a
-        cross-shard gather (sample_cohort draws cohorts in this shape)."""
+        Sharded: [n_shards, per_max] with row s holding ONLY shard s's
+        client ids, grouped here so the device program never needs a
+        cross-shard gather. Rows shorter than the longest shard's count
+        (imbalanced cohorts) are padded with the sentinel id C: the round
+        body gives pad entries weight 0 and a local row index of C_loc
+        (out of range — scatters drop it, gathers clamp harmlessly), and
+        the controller scatter at global id C is dropped by jax's
+        out-of-bounds-update semantics."""
         if cohort is None:
             return None
         if not self.sharded:
             return jnp.asarray(cohort, jnp.int32)
-        c = np.asarray(cohort, np.int32)
+        c = np.asarray(cohort, np.int32).reshape(-1)
         K, C_loc = self._n_shards, self._local_C
-        if c.ndim == 1:
-            if c.size % K:
-                raise ValueError(
-                    f"sharded cohort size {c.size} must be a multiple of "
-                    f"{K} shards (use sample_cohort)"
-                )
-            c = np.sort(c).reshape(K, c.size // K)
-        owners = c // C_loc
-        if not np.array_equal(owners, np.broadcast_to(
-                np.arange(K, dtype=np.int32)[:, None], c.shape)):
+        C = K * C_loc
+        if c.size == 0:
+            raise ValueError("cohort must not be empty")
+        if (c < 0).any() or (c >= C).any():
             raise ValueError(
-                "cohort is not per-shard balanced: each shard must "
-                f"contribute exactly {c.shape[1]} of its own clients "
-                "(use sample_cohort)"
+                f"cohort ids must be in [0, {C}); got range "
+                f"[{int(c.min())}, {int(c.max())}]"
             )
-        return jnp.asarray(c)
+        owners = c // C_loc
+        counts = np.bincount(owners, minlength=K)
+        per = int(counts.max())
+        out = np.full((K, per), C, np.int32)  # C = masked-pad sentinel
+        for s in range(K):
+            row = np.sort(c[owners == s])
+            out[s, : row.size] = row
+        return jnp.asarray(out)
 
     def _resolve_data(self, batches, key):
         """Shared data-path contract for run_round/run_fused: host batches
@@ -508,10 +593,15 @@ class RoundEngine:
         the legacy ``RandomState`` also works (same ``choice`` API) but new
         call sites should pass a Generator.
 
-        Sharded engines draw STRATIFIED cohorts — m/n_shards clients from
-        each shard's own id range — so the cohort is a per-shard index set
-        and dispatch never gathers client data across shards. The flat
-        array is still sorted (shard id ranges are contiguous).
+        Sharded engines draw STRATIFIED cohorts — about m/n_shards clients
+        from each shard's own id range — so the cohort is a per-shard index
+        set and dispatch never gathers client data across shards. The flat
+        array is still sorted (shard id ranges are contiguous). When m does
+        not divide the shard count (or m < n_shards), the draw degrades to
+        an imbalanced-but-valid split — ``extra = m % n_shards`` randomly
+        chosen shards contribute one extra client — with a host-side
+        warning; ``_prep_cohort`` sentinel-pads the short rows so the
+        device program stays rectangular (pad entries are exact no-ops).
         """
         m, C = self.cfg.cohort_size, self.num_clients
         if m is None or C is None or m >= C:
@@ -519,9 +609,21 @@ class RoundEngine:
         if not self.sharded:
             return np.sort(rng.choice(C, size=m, replace=False)).astype(np.int32)
         K, C_loc = self._n_shards, self._local_C
-        per = m // K  # divisibility enforced at construction
+        base, extra = divmod(m, K)
+        counts = np.full(K, base, np.int64)
+        if extra:
+            warnings.warn(
+                f"cohort_size={m} does not divide the {K} client-axis "
+                f"shards: degrading to an imbalanced per-shard split "
+                f"({extra} shards draw {base + 1} clients, the rest "
+                f"{base}); pad rows are masked no-ops",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            counts[rng.choice(K, size=extra, replace=False)] += 1
         rows = [
-            s * C_loc + np.sort(rng.choice(C_loc, size=per, replace=False))
+            s * C_loc + np.sort(rng.choice(C_loc, size=int(counts[s]),
+                                           replace=False))
             for s in range(K)
         ]
         return np.concatenate(rows).astype(np.int32)

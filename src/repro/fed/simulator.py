@@ -70,6 +70,15 @@ class FedSimConfig:
     # -- driver knobs -------------------------------------------------------
     overlap: int = 1  # in-flight rounds before host sync; 0 = sync mode
     stats_decay: float = 0.9  # staleness retention for unobserved clients
+    # -- buffered asynchronous rounds (core/buffered.py, DESIGN.md §13) -----
+    buffered: bool = False  # FedBuff-style continuous admission instead of
+    #   the synchronous barrier; waves=1 + instant latency + grad_decay=1.0
+    #   reproduces the sync driver exactly (the parity oracle)
+    buffer_waves: int = 1  # cohorts in flight
+    grad_decay: float = 1.0  # staleness weight decay^age on arrivals
+    latency_kind: str = "instant"  # instant | uniform | exp | hetero
+    latency_scale: float = 1.0
+    latency_spread: float = 1.0  # hetero per-client lognormal spread
     # -- client-axis sharding (DESIGN.md §11) -------------------------------
     mesh: Optional[object] = None  # federated mesh: shard clients over
     #   ('pod','data'); None = single-device round
@@ -118,6 +127,37 @@ class FederatedSimulator:
         # the numpy twin stays constructible for oracle tests / external use
         self.controller = FedVecaController(ctrl_cfg, self.C)
         self._eval_fn = jax.jit(model.loss)
+        self.buffered_engine = None
+        if cfg.buffered:
+            if cfg.data_path != "device":
+                raise ValueError("buffered rounds need data_path='device' "
+                                 "(arrival waves sample inside jit)")
+            from repro.core.buffered import (
+                BufferedConfig,
+                BufferedRoundEngine,
+                LatencyModel,
+            )
+
+            self.buffered_engine = BufferedRoundEngine(
+                self.engine, self.p,
+                BufferedConfig(
+                    waves=cfg.buffer_waves,
+                    grad_decay=cfg.grad_decay,
+                    latency=LatencyModel(
+                        cfg.latency_kind, scale=cfg.latency_scale,
+                        spread=cfg.latency_spread, seed=cfg.seed,
+                    ),
+                    seed=cfg.seed,
+                    overlap=max(cfg.overlap, 1),
+                ),
+                mode=cfg.mode,
+                eval_fn=(
+                    make_dataset_evaluator(model.loss, test_data)
+                    if test_data is not None
+                    else None
+                ),
+                eval_every=cfg.eval_every,
+            )
         self.driver = TrainDriver(
             self.engine, self.p,
             overlap=cfg.overlap, seed=cfg.seed, mode=cfg.mode,
@@ -174,6 +214,9 @@ class FederatedSimulator:
         if params is None:
             params = self.model.init(jax.random.PRNGKey(cfg.seed))
         log = RunLogger(cfg.log_dir, name=f"{cfg.mode}")
+        if self.buffered_engine is not None:
+            return self.buffered_engine.run(params, rounds, self.init_taus(),
+                                            logger=log)
         return self.driver.run(params, rounds, self.init_taus(), logger=log)
 
 

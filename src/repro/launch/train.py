@@ -79,6 +79,17 @@ def main():
                     help="clients per client-axis shard under --mesh")
     ap.add_argument("--data-axis", type=int, default=2)
     ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--buffered", action="store_true",
+                    help="buffered asynchronous rounds (core/buffered.py): "
+                         "continuous admission, step every m arrivals")
+    ap.add_argument("--buffer-waves", type=int, default=2,
+                    help="cohort waves in flight under --buffered")
+    ap.add_argument("--grad-decay", type=float, default=0.9,
+                    help="staleness weight decay^age on buffered arrivals")
+    ap.add_argument("--latency", default="exp",
+                    choices=("instant", "uniform", "exp", "hetero"),
+                    help="simulated client latency model under --buffered")
+    ap.add_argument("--latency-scale", type=float, default=1.0)
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -145,6 +156,32 @@ def main():
               f"tau_k={row['tau_k']:.2f} tau_next={np.asarray(row['tau']).tolist()} "
               f"({now - t_last[0]:.1f}s)")
         t_last[0] = now
+
+    if args.buffered:
+        if args.host_data:
+            ap.error("--buffered needs the device data path (drop --host-data)")
+        from repro.core.buffered import (
+            BufferedConfig,
+            BufferedRoundEngine,
+            LatencyModel,
+        )
+
+        buffered = BufferedRoundEngine(
+            engine, p,
+            BufferedConfig(
+                waves=args.buffer_waves, grad_decay=args.grad_decay,
+                latency=LatencyModel(args.latency, scale=args.latency_scale),
+                seed=0, overlap=max(args.overlap, 1),
+            ),
+            mode=args.mode, on_row=on_row,
+        )
+        with mesh:
+            buffered.run(params, args.rounds, taus)
+        print(f"done. host-blocked {buffered.host_blocked_s:.2f}s, "
+              f"sim_time {buffered.sim_time:.1f} ticks over "
+              f"{args.rounds} buffered steps ({buffered.wave_dispatches} "
+              f"waves, {buffered.fold_dispatches} folds)")
+        return
 
     driver = TrainDriver(
         engine, p, overlap=args.overlap, seed=0, mode=args.mode,

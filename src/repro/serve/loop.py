@@ -44,6 +44,7 @@ import numpy as np
 # CPU backends that predate donation support ignore the hint; scoped filter
 # so the warning doesn't fire once per serve dispatch
 from repro.core.engine import _quiet_donation
+from repro.core.scheduler import AdmissionScheduler
 from repro.models.model import Model, decode_capability
 from repro.models.transformer import insert_cache_pages, insert_cache_slot
 from repro.serve.sampling import GREEDY, SamplerConfig, make_sample_fn
@@ -89,8 +90,14 @@ def _round_up(n: int, mult: int) -> int:
     return -(-n // mult) * mult
 
 
-class ServeLoop:
+class ServeLoop(AdmissionScheduler):
     """Continuous-batching driver: admission + one decode_step per tick.
+
+    An ``AdmissionScheduler`` instance (DESIGN.md §13): admission fills
+    free cache slots from the request queue, the fold is one fixed-shape
+    ``decode_step`` over every slot, and the commit appends the sampled
+    tokens and retires finished requests — the same admit/fold/commit
+    contract the buffered training engine runs.
 
     Args:
       model, params: any Model with a decode path (decode_capability).
@@ -178,6 +185,7 @@ class ServeLoop:
         self.cache = self._init_cache()
         self.table = SlotTable(self.n_slots)
         self.t = 0
+        self._queue: Optional[RequestQueue] = None
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
         self.rejected = []
@@ -218,13 +226,16 @@ class ServeLoop:
     def _retire(self, slot: int):
         self.table.retire(slot, self.t)
 
-    def _admit(self, queue: RequestQueue):
+    def _admit(self):
         """Fill free slots from the arrived queue; loops until no slot or
         no admissible request is left, so a slot freed by an instant-
         finishing admit is reconsidered immediately. Oversized requests
         are recorded as failed (the trace keeps serving); a request the
         loop COULD serve but can't right now (paged pool exhausted) stays
         queued — admission backpressure, FIFO order preserved."""
+        queue = self._queue
+        if queue is None:
+            return
         while True:
             free = self.table.free_slots()
             if not free:
@@ -260,29 +271,42 @@ class ServeLoop:
                 jnp.asarray(rid), jnp.asarray(nstep),
             )
 
-    def tick(self, queue: RequestQueue):
-        """Admit -> one decode_step -> retire -> admit again.
+    def _has_work(self) -> bool:
+        return self.table.any_active()
 
-        The trailing admission (retire-then-admit) re-fills slots freed by
-        this tick's retirement: the new request prefills NOW (its first
-        token lands this tick) and joins the decode batch next tick,
-        instead of idling a full tick."""
+    def _pending(self) -> bool:
+        return self._queue is not None and len(self._queue) > 0
+
+    def _fold(self):
+        """One fixed-shape decode_step over every slot (retired and
+        never-filled rows are exact device no-ops)."""
         table = self.table
-        self._admit(queue)
+        rid = np.array([r.rid if r else 0 for r in table.req], np.int32)
+        nstep = np.array([len(r.out) if r else 0 for r in table.req],
+                         np.int32)
+        nxt, self.cache = self._dispatch_decode(rid, nstep)
+        self.decode_dispatches += 1
+        return np.asarray(nxt)
 
-        if table.any_active():
-            rid = np.array([r.rid if r else 0 for r in table.req], np.int32)
-            nstep = np.array([len(r.out) if r else 0 for r in table.req],
-                             np.int32)
-            nxt, self.cache = self._dispatch_decode(rid, nstep)
-            self.decode_dispatches += 1
-            nxt_np = np.asarray(nxt)
-            for slot in table.live_slots():
-                table.append(slot, int(nxt_np[slot]))
-                if table.req[slot].finished():
-                    self._retire(slot)
-            self._admit(queue)
-        self.t += 1
+    def _commit(self, nxt_np) -> None:
+        """Append this tick's sampled tokens; retire finished requests
+        (their slots are re-filled by the trailing admit of the same
+        tick — the retire-then-admit property)."""
+        table = self.table
+        for slot in table.live_slots():
+            table.append(slot, int(nxt_np[slot]))
+            if table.req[slot].finished():
+                self._retire(slot)
+
+    def tick(self, queue: Optional[RequestQueue] = None):
+        """Admit -> one decode_step -> retire -> admit again
+        (``AdmissionScheduler.tick``; the trailing admission re-fills
+        slots freed by this tick's retirement: the new request prefills
+        NOW — its first token lands this tick — and joins the decode
+        batch next tick instead of idling a full tick)."""
+        if queue is not None:
+            self._queue = queue
+        super().tick()
 
     def _extra_stats(self) -> Dict:
         return {}
@@ -294,10 +318,9 @@ class ServeLoop:
         and arrival ticks are per-trace; compiled programs are reused.
         """
         self.reset()
-        queue = RequestQueue(requests)
+        self._queue = RequestQueue(requests)
         t0 = time.time()
-        while len(queue) or self.table.any_active():
-            self.tick(queue)
+        self.drain()
         jax.block_until_ready(self.cache)
         wall = time.time() - t0
         toks = sum(len(r.out) for r in requests)

@@ -1,0 +1,259 @@
+"""Buffered asynchronous rounds (core/buffered.py, DESIGN.md §13).
+
+The acceptance bar: with instant arrivals, waves=1, and grad_decay=1.0
+the buffered engine IS the synchronous engine — same rng/key discipline
+as TrainDriver, so the tau trace matches EXACTLY and the params match
+bitwise on a single device. Async modes (waves>1, simulated latency,
+grad_decay<1) are checked for liveness, staleness accounting, and
+FIFO backpressure; the LatencyModel's per-client ``fold_in`` streams are
+checked for cohort-composition invariance (ISSUE 7 satellite).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.buffered import (
+    BufferedConfig,
+    BufferedRoundEngine,
+    LatencyModel,
+)
+from repro.core.controller import ControllerConfig, ControllerCore
+from repro.core.driver import TrainDriver
+from repro.core.engine import EngineConfig, RoundEngine
+from repro.data.device import DeviceShards
+from repro.data.partition import partition_case3
+from repro.data.synthetic import Dataset, binarize_even_odd, make_classification
+from repro.models.model import build_model_by_name
+
+C, TAU_MAX, ROUNDS = 5, 8, 6
+
+
+@pytest.fixture(scope="module")
+def setup():
+    orig = make_classification(1000, (784,), 10, seed=0)
+    train = binarize_even_odd(orig)
+    parts = partition_case3(orig.y, C, seed=0)
+    clients = [Dataset(train.x[s], train.y[s]) for s in parts]
+    model = build_model_by_name("svm-mnist")
+    p = np.array([len(c) for c in clients], np.float64)
+    p = (p / p.sum()).astype(np.float32)
+    return model, clients, p
+
+
+def _engine(model, clients, cohort=None, mode="fedveca"):
+    return RoundEngine(
+        model.loss,
+        EngineConfig(mode=mode, eta=0.05, tau_max=TAU_MAX, batch_size=16,
+                     cohort_size=cohort),
+        shards=DeviceShards.from_datasets(clients),
+        num_clients=C,
+        controller=ControllerCore(
+            ControllerConfig(eta=0.05, tau_max=TAU_MAX, tau_init=2), C,
+            adapt=(mode == "fedveca"),
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# parity oracle: instant arrivals + waves=1 + decay=1.0 == sync engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cohort", [3, None])
+def test_buffered_parity_matches_sync_driver(setup, cohort):
+    """Exact tau trace AND bitwise params vs TrainDriver, partial and full
+    participation (single device: every program sees the same values in
+    the same reduction order)."""
+    model, clients, p = setup
+    taus0 = np.full(C, 2, np.int32)
+
+    drv = TrainDriver(_engine(model, clients, cohort), p, overlap=1, seed=0)
+    log_s = drv.run(model.init(jax.random.PRNGKey(0)), ROUNDS, taus0.copy())
+
+    buf = BufferedRoundEngine(
+        _engine(model, clients, cohort), p,
+        BufferedConfig(waves=1, grad_decay=1.0,
+                       latency=LatencyModel("instant"), seed=0))
+    log_b = buf.run(model.init(jax.random.PRNGKey(0)), ROUNDS, taus0.copy())
+
+    assert len(log_b.rows) == ROUNDS
+    for rs, rb in zip(log_s.rows, log_b.rows):
+        np.testing.assert_array_equal(rs["tau"], rb["tau"])  # EXACT
+        assert rs["train_loss"] == rb["train_loss"]  # bitwise
+        assert rs["tau_all"] == rb["tau_all"]
+        assert rb["mean_age"] == 0.0 and rb["sim_time"] == 0.0
+        if cohort is not None:
+            np.testing.assert_array_equal(np.sort(np.asarray(rs["cohort"])),
+                                          rb["cohort"])
+    for a, b in zip(jax.tree.leaves(log_s.params),
+                    jax.tree.leaves(log_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))  # bitwise
+    assert log_s.tau_all == log_b.tau_all
+    assert buf.wave_dispatches == ROUNDS
+    assert buf.fold_dispatches == ROUNDS  # one wave folds per commit
+
+
+def test_buffered_parity_other_modes(setup):
+    """fednova/fedavg ride the same buffered step (fixed taus)."""
+    model, clients, p = setup
+    for mode in ("fednova", "fedavg"):
+        drv = TrainDriver(_engine(model, clients, 3, mode), p, overlap=1,
+                          seed=0, mode=mode)
+        log_s = drv.run(model.init(jax.random.PRNGKey(0)), 3,
+                        np.full(C, 3, np.int32))
+        buf = BufferedRoundEngine(
+            _engine(model, clients, 3, mode), p,
+            BufferedConfig(waves=1, latency=LatencyModel("instant"), seed=0),
+            mode=mode)
+        log_b = buf.run(model.init(jax.random.PRNGKey(0)), 3,
+                        np.full(C, 3, np.int32))
+        for a, b in zip(jax.tree.leaves(log_s.params),
+                        jax.tree.leaves(log_b.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# async semantics: staleness, backpressure, liveness
+# ---------------------------------------------------------------------------
+
+
+def test_buffered_staleness_and_liveness(setup):
+    """waves>1 with latency: every commit still sees a FULL buffer, ages
+    are positive and bounded by the in-flight wave count's worst case,
+    and one wave is dispatched per commit (steady state W in flight)."""
+    model, clients, p = setup
+    buf = BufferedRoundEngine(
+        _engine(model, clients, 3), p,
+        BufferedConfig(waves=3, grad_decay=0.5,
+                       latency=LatencyModel("exp", scale=1.0, seed=3),
+                       seed=0))
+    steps = 12
+    log = buf.run(model.init(jax.random.PRNGKey(0)), steps,
+                  np.full(C, 2, np.int32))
+    assert len(log.rows) == steps
+    assert all(np.isfinite(r["train_loss"]) for r in log.rows)
+    assert max(r["max_age"] for r in log.rows) > 0  # real staleness mixed in
+    assert buf.wave_dispatches == steps
+    # simulated clock only moves forward
+    times = [r["sim_time"] for r in log.rows]
+    assert all(b >= a for a, b in zip(times, times[1:]))
+
+
+def test_buffered_fifo_backpressure(setup):
+    """With heavy-tailed latency several copies of one slot's row queue up;
+    the per-slot FIFO must hold them without loss: every dispatched arrival
+    is eventually folded exactly once (m folds per commit overall)."""
+    model, clients, p = setup
+    buf = BufferedRoundEngine(
+        _engine(model, clients, 3), p,
+        BufferedConfig(waves=4, grad_decay=0.9,
+                       latency=LatencyModel("hetero", scale=1.0, spread=2.0,
+                                            seed=5),
+                       seed=0))
+    steps = 10
+    log = buf.run(model.init(jax.random.PRNGKey(0)), steps,
+                  np.full(C, 2, np.int32))
+    assert len(log.rows) == steps
+    # all dispatched waves are fully consumed or still queued, never dropped:
+    # folded rows == m per commit, so fold dispatches cover every commit
+    assert buf.fold_dispatches >= steps
+    assert all(np.isfinite(r["train_loss"]) for r in log.rows)
+
+
+def test_buffered_decay_downweights_stale_rows(setup):
+    """grad_decay<1 changes the committed step whenever stale rows mix in
+    (same seeds, same arrivals — only the staleness weights differ)."""
+    model, clients, p = setup
+
+    def run(decay):
+        buf = BufferedRoundEngine(
+            _engine(model, clients, 3), p,
+            BufferedConfig(waves=3, grad_decay=decay,
+                           latency=LatencyModel("exp", scale=1.0, seed=3),
+                           seed=0))
+        return buf.run(model.init(jax.random.PRNGKey(0)), 8,
+                       np.full(C, 2, np.int32))
+
+    la, lb = run(1.0), run(0.2)
+    # identical event streams (same latency seed) => same ages...
+    np.testing.assert_array_equal([r["mean_age"] for r in la.rows],
+                                  [r["mean_age"] for r in lb.rows])
+    # ...but different staleness weighting => different trajectories
+    assert any(
+        not np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(la.params), jax.tree.leaves(lb.params))
+    )
+
+
+# ---------------------------------------------------------------------------
+# LatencyModel: fold_in streams are cohort-composition invariant
+# ---------------------------------------------------------------------------
+
+
+def test_latency_composition_invariance():
+    """A client's latency draw depends only on (seed, id, dispatch count) —
+    never on which other clients share the batch draw."""
+    for kind in ("uniform", "exp", "hetero"):
+        lm = LatencyModel(kind, scale=2.0, spread=0.7, seed=11)
+        ids = np.array([3, 17, 42], np.int64)
+        counts = np.array([0, 5, 2], np.int64)
+        together = lm.draw(ids, counts)
+        alone = np.array([
+            lm.draw(np.array([i]), np.array([c]))[0]
+            for i, c in zip(ids, counts)
+        ])
+        np.testing.assert_array_equal(together, alone)
+        # permuting the batch permutes the draws
+        perm = np.array([2, 0, 1])
+        np.testing.assert_array_equal(lm.draw(ids[perm], counts[perm]),
+                                      together[perm])
+        # a fresh model with the same seed reproduces the stream
+        np.testing.assert_array_equal(
+            LatencyModel(kind, scale=2.0, spread=0.7, seed=11).draw(ids, counts),
+            together)
+        # the dispatch counter advances the per-dispatch stream
+        assert not np.array_equal(lm.draw(ids, counts + 1), together)
+
+
+def test_latency_kinds_and_validation():
+    lm = LatencyModel("instant")
+    np.testing.assert_array_equal(
+        lm.draw(np.arange(4), np.zeros(4, np.int64)), np.zeros(4))
+    for kind in ("uniform", "exp", "hetero"):
+        d = LatencyModel(kind, scale=1.5, seed=0).draw(
+            np.arange(64), np.zeros(64, np.int64))
+        assert (d >= 0).all() and np.isfinite(d).all() and d.std() > 0
+    # hetero keeps a persistent per-client speed factor: the SAME client is
+    # consistently slower/faster across dispatches
+    lm = LatencyModel("hetero", scale=1.0, spread=1.5, seed=2)
+    ids = np.arange(32)
+    d0 = lm.draw(ids, np.zeros(32, np.int64))
+    d1 = lm.draw(ids, np.ones(32, np.int64))
+    r = np.corrcoef(np.log(d0), np.log(d1))[0, 1]
+    assert r > 0.3, r  # lognormal factor correlates across dispatches
+    with pytest.raises(ValueError, match="unknown latency kind"):
+        LatencyModel("warp")
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+
+def test_buffered_validation(setup):
+    model, clients, p = setup
+    eng = _engine(model, clients, 3)
+    with pytest.raises(ValueError, match="waves"):
+        BufferedRoundEngine(eng, p, BufferedConfig(waves=0))
+    with pytest.raises(ValueError, match="grad_decay"):
+        BufferedRoundEngine(eng, p, BufferedConfig(grad_decay=0.0))
+    with pytest.raises(ValueError, match="controller"):
+        BufferedRoundEngine(
+            RoundEngine(model.loss,
+                        EngineConfig(mode="fedveca", eta=0.05,
+                                     tau_max=TAU_MAX, batch_size=16),
+                        shards=DeviceShards.from_datasets(clients),
+                        num_clients=C),
+            p)
+    with pytest.raises(ValueError, match="scaffold"):
+        BufferedRoundEngine(_engine(model, clients, 3, mode="scaffold"), p)

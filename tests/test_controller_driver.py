@@ -182,6 +182,88 @@ def test_decay_validation():
         ControllerCore(ControllerConfig(eta=0.05, decay=-0.9), 3)
 
 
+def test_decay_age_weight_long_run():
+    """ISSUE-7 satellite: the iterative f32 staleness product ``w *= decay``
+    must track exact ``decay^age`` over 1500 rounds of partial
+    participation (cumulative rounding is bounded by ~age half-ulps), and
+    tiny decay must underflow cleanly to the pure mean fill — zero, never
+    NaN/Inf — long before that."""
+    AGE = 1500
+    mean = np.float32((1.0 + 2.0 + 9.0) / 3.0)
+    for decay in (0.999, 0.99, 0.5):
+        cs = CohortStats(3, decay=decay)
+        cs.scatter(_stats([1.0, 2.0, 9.0], [1.0, 1.0, 1.0]),
+                   np.arange(3), np.full(3, 2))
+        for _ in range(AGE):
+            full = cs.scatter(_stats([1.0, 2.0], [1.0, 1.0]),
+                              np.array([0, 1]), np.full(3, 2))
+        w = float(cs.w[2])
+        assert np.isfinite(w) and w >= 0.0
+        exact = float(np.float64(decay) ** AGE)
+        if exact > 1e-30:
+            assert abs(w - exact) <= 2e-4 * exact, (decay, w, exact)
+        else:
+            assert w == 0.0  # clean underflow, no denormal garbage kept
+        # the fill formula holds at ANY age: w*last_seen + (1-w)*mean
+        fill = float(np.asarray(full.beta)[2])
+        np.testing.assert_allclose(fill, w * 9.0 + (1.0 - w) * float(mean),
+                                   rtol=1e-6)
+        if decay <= 0.5:
+            np.testing.assert_allclose(fill, mean, rtol=1e-6)  # pure mean
+        # participants are exact passthroughs regardless of age
+        np.testing.assert_array_equal(np.asarray(full.beta)[:2],
+                                      np.asarray([1.0, 2.0], np.float32))
+
+
+def test_decay_one_freezes_last_seen_forever():
+    """decay=1.0 is the documented freeze-at-last-seen boundary: the
+    staleness weight must stay EXACTLY 1.0 (1.0*1.0 is exact in f32, no
+    drift) however old the observation gets."""
+    cs = CohortStats(3, decay=1.0)
+    cs.scatter(_stats([1.0, 2.0, 9.0], [1.0, 1.0, 1.0]),
+               np.arange(3), np.full(3, 2))
+    for _ in range(1200):
+        full = cs.scatter(_stats([1.0, 2.0], [1.0, 1.0]),
+                          np.array([0, 1]), np.full(3, 2))
+    assert float(cs.w[2]) == 1.0
+    assert float(np.asarray(full.beta)[2]) == 9.0  # bitwise freeze
+
+
+@pytest.mark.slow
+def test_core_stale_w_long_run_matches_host_mirror():
+    """Device twin of the long-run staleness product: 1100 jitted
+    ControllerCore steps under alternating 2-of-4 cohorts keep ``stale_w``
+    bit-identical to a host f32 mirror of ``w *= decay; w[members] = 1``
+    (both sides do one correctly-rounded f32 multiply per round)."""
+    C_, decay = 4, 0.995
+    core = ControllerCore(ControllerConfig(eta=0.05, decay=decay), C_,
+                          adapt=True)
+    step = jax.jit(core.step)
+    params_like = {"w": jnp.zeros((2,))}
+    state = core.init_state(params_like, np.full(C_, 2, np.int32))
+    w_host = np.zeros(C_, np.float32)
+    cohorts = [np.array([0, 1]), np.array([2, 3]), np.array([0, 2])]
+    for k in range(1100):
+        members = cohorts[k % 3]
+        n = len(members)
+        stats = RoundStats(
+            loss0=jnp.ones((n,)), beta=jnp.full((n,), 1.5, jnp.float32),
+            delta=jnp.ones((n,), jnp.float32), g0_sqnorm=jnp.ones((n,)),
+            tau=jnp.full((n,), 2, jnp.int32), tau_k=jnp.float32(2.0),
+            global_grad={"w": jnp.ones((2,), jnp.float32)},
+            update_sqnorm=jnp.float32(0.1), params_sqnorm=jnp.float32(1.0),
+            global_grad_sqnorm=jnp.float32(1.0),
+        )
+        state, _ = step(state, stats, jnp.asarray(members, jnp.int32),
+                        state.taus)
+        w_host *= np.float32(decay)
+        w_host[members] = 1.0
+    np.testing.assert_array_equal(np.asarray(state.stale_w), w_host)
+    # client 1 was last seen one round before the end (k=1098, cohort
+    # [0,1]) so its weight is exactly one decay factor off 1.0
+    assert w_host[1] == np.float32(decay)
+
+
 # ---------------------------------------------------------------------------
 # jitted ControllerCore vs the numpy oracle, trace-for-trace
 # ---------------------------------------------------------------------------

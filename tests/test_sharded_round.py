@@ -144,9 +144,22 @@ def test_device_shards_reject_indivisible_C(setup):
         DeviceShards.from_datasets(ds[:10], mesh=mesh)
     with pytest.raises(ValueError, match="divide evenly"):
         RoundEngine(model.loss, EngineConfig(), num_clients=10, mesh=mesh)
-    with pytest.raises(ValueError, match="cohort_size"):
-        RoundEngine(model.loss, EngineConfig(cohort_size=6), num_clients=C,
-                    mesh=mesh)
+    # cohort_size not dividing the shard count is no longer a construction
+    # error: sample_cohort degrades to an imbalanced-but-valid split with a
+    # host-side warning, and _prep_cohort sentinel-pads the short rows
+    eng = RoundEngine(model.loss, EngineConfig(cohort_size=6), num_clients=C,
+                      mesh=mesh)
+    with pytest.warns(RuntimeWarning, match="imbalanced"):
+        c = eng.sample_cohort(np.random.default_rng(0))
+    assert c.shape == (6,)
+    assert np.array_equal(c, np.sort(c))
+    assert len(np.unique(c)) == 6 and c.min() >= 0 and c.max() < C
+    # m < n_shards degrades too (some shards draw zero clients)
+    eng1 = RoundEngine(model.loss, EngineConfig(cohort_size=3), num_clients=C,
+                       mesh=mesh)
+    with pytest.warns(RuntimeWarning, match="imbalanced"):
+        c1 = eng1.sample_cohort(np.random.default_rng(0))
+    assert c1.shape == (3,) and len(np.unique(c1)) == 3
 
 
 # ---------------------------------------------------------------------------
@@ -221,8 +234,8 @@ def test_sharded_cohort_round_matches_single_device(setup):
 
 @needs_devices
 def test_stratified_cohorts_and_rejection(setup):
-    """sample_cohort draws per-shard index sets; unbalanced cohorts are
-    refused (they would force a cross-shard gather)."""
+    """sample_cohort draws per-shard index sets; out-of-range cohort ids
+    are still refused, but imbalanced cohorts now run (sentinel-padded)."""
     model, ds, *_ = setup
     mesh = make_federated_mesh(8)
     eng = _engine(model, ds, mesh, cohort=8)
@@ -232,11 +245,39 @@ def test_stratified_cohorts_and_rejection(setup):
         assert c.shape == (8,)
         assert np.array_equal(c // 2, np.arange(8))  # one client per shard
         assert np.array_equal(c, np.sort(c))
-    with pytest.raises(ValueError, match="per-shard"):
+    with pytest.raises(ValueError, match=r"cohort ids must be in"):
         eng.run_round(model.init(jax.random.PRNGKey(0)),
                       np.full(C, 2, np.int32), np.full(C, 1 / C, np.float32),
                       0.0, key=jax.random.PRNGKey(0),
-                      cohort=np.array([0, 1, 2, 3, 4, 5, 6, 7], np.int32))
+                      cohort=np.array([0, 1, 2, 3, 4, 5, 6, C], np.int32))
+
+
+@needs_devices
+def test_imbalanced_cohort_matches_single_device(setup):
+    """Regression for the sample_cohort degrade path: an UNBALANCED cohort
+    (ids 0..7 all live on the first 4 of 8 shards — two clients each, zero
+    on the rest) must run sharded via sentinel padding and reproduce the
+    single-device round on the same cohort within the documented reduce-
+    ordering tolerance."""
+    model, ds, p, tau, _ = setup
+    mesh = make_federated_mesh(8)
+    cohort = np.arange(8, dtype=np.int32)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(7)
+    p1, st1, _ = _engine(model, ds, None).run_round(
+        params, tau, p, 0.05, key=key, cohort=cohort)
+    p2, st2, _ = _engine(model, ds, mesh).run_round(
+        params, tau, p, 0.05, key=key, cohort=cohort)
+    for k in p1:
+        np.testing.assert_allclose(np.asarray(p1[k]), np.asarray(p2[k]),
+                                   atol=1e-6, rtol=1e-6)
+    # per-cohort stats come back sentinel-padded as (shard, slot) row-major:
+    # ids 0..7 fill shards 0-3 two slots each, so the 8 valid rows are
+    # exactly the first 8 of the flattened [16] vector, in cohort order
+    np.testing.assert_allclose(np.asarray(st2.loss0).reshape(-1)[:8],
+                               np.asarray(st1.loss0), atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(float(st1.tau_k), float(st2.tau_k),
+                               atol=1e-6, rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------
@@ -308,6 +349,78 @@ def test_sharded_driver_end_to_end(setup):
         np.testing.assert_array_equal(outs[0][0][k], outs[2][0][k])
     for a, b in zip(outs[0][1], outs[2][1]):
         np.testing.assert_array_equal(a, b)
+
+
+@needs_devices
+def test_sharded_buffered_matches_sync_sharded(setup):
+    """Buffered engine on the federated mesh in parity mode (waves=1,
+    instant arrivals, grad_decay=1.0): the tau trace must EXACTLY match
+    the sharded sync TrainDriver; params stay within the documented
+    reduce-order tolerance (the buffered commit reduces under GSPMD
+    rather than inside shard_map). An async (waves=2, exp-latency) run
+    then smoke-checks liveness on the same mesh."""
+    from repro.core.buffered import (
+        BufferedConfig,
+        BufferedRoundEngine,
+        LatencyModel,
+    )
+
+    model, ds, p, _, _ = setup
+    mesh = make_federated_mesh(8)
+    ctl_cfg = ControllerConfig(eta=0.05, tau_max=TAU_MAX)
+
+    def build(mesh_):
+        return _engine(model, ds, mesh_, cohort=8, donate=True,
+                       controller=ControllerCore(ctl_cfg, C, mesh=mesh_))
+
+    drv = TrainDriver(build(mesh), p, overlap=1, seed=0)
+    log_s = drv.run(model.init(jax.random.PRNGKey(0)), 5,
+                    np.full(C, 2, np.int32))
+
+    buf = BufferedRoundEngine(
+        build(mesh), p,
+        BufferedConfig(waves=1, grad_decay=1.0,
+                       latency=LatencyModel("instant"), seed=0))
+    log_b = buf.run(model.init(jax.random.PRNGKey(0)), 5,
+                    np.full(C, 2, np.int32))
+
+    for rs, rb in zip(log_s.rows, log_b.rows):
+        np.testing.assert_array_equal(rs["tau"], rb["tau"])  # EXACT
+        np.testing.assert_array_equal(np.sort(np.asarray(rs["cohort"])),
+                                      rb["cohort"])
+        assert rb["mean_age"] == 0.0
+    ps = jax.tree.map(np.asarray, log_s.params)
+    pb = jax.tree.map(np.asarray, log_b.params)
+    for k in ps:
+        np.testing.assert_allclose(ps[k], pb[k], atol=2e-5, rtol=1e-4)
+    # buffer and controller per-client state stay client-sharded
+    spec = buf._buf["loss0"].sharding.spec
+    assert any(s is not None for s in spec), spec
+
+    buf2 = BufferedRoundEngine(
+        build(mesh), p,
+        BufferedConfig(waves=2, grad_decay=0.5,
+                       latency=LatencyModel("exp", scale=1.0, seed=1), seed=0))
+    log2 = buf2.run(model.init(jax.random.PRNGKey(0)), 5,
+                    np.full(C, 2, np.int32))
+    assert all(np.isfinite(r["train_loss"]) for r in log2.rows)
+    assert max(r["max_age"] for r in log2.rows) > 0
+
+
+@needs_devices
+def test_sharded_buffered_rejects_indivisible_buffer(setup):
+    """Slot j is owned by the shard owning wave row j, so the buffer size
+    must divide the client-axis shard count."""
+    from repro.core.buffered import BufferedRoundEngine
+
+    model, ds, p, _, _ = setup
+    mesh = make_federated_mesh(8)
+    eng = _engine(model, ds, mesh, cohort=6, donate=True,
+                  controller=ControllerCore(
+                      ControllerConfig(eta=0.05, tau_max=TAU_MAX), C,
+                      mesh=mesh))
+    with pytest.raises(ValueError, match="must divide"):
+        BufferedRoundEngine(eng, p)
 
 
 @needs_devices
