@@ -3,7 +3,7 @@ export PYTHONPATH
 
 .PHONY: test test-fast collect test-sharded ci smoke bench-round-engine \
 	bench-controller-driver bench-sharded bench-buffered bench-serve \
-	bench-serve-paged bench-paged-kernel
+	bench-serve-paged bench-serve-slo bench-paged-kernel
 
 test:
 	python -m pytest -x -q
@@ -41,6 +41,9 @@ bench-serve:
 
 bench-serve-paged:
 	python benchmarks/serve_paged.py
+
+bench-serve-slo:
+	python benchmarks/serve_slo.py
 
 bench-paged-kernel:
 	python -m benchmarks.run --only paged_kernel

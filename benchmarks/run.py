@@ -29,6 +29,7 @@ from benchmarks import (  # noqa: E402
     round_engine,
     serve_loop,
     serve_paged,
+    serve_slo,
     sharded_round,
 )
 from benchmarks.common import FULL, QUICK, emit  # noqa: E402
@@ -50,6 +51,7 @@ BENCHES = {
     "buffered_round": buffered_round.run,
     "serve_loop": serve_loop.run,
     "serve_paged": serve_paged.run,
+    "serve_slo": serve_slo.run,
 }
 
 

@@ -10,6 +10,8 @@ max-len retirement frees slots for immediate reuse.
     PYTHONPATH=src python examples/serve_decode.py --serial   # old loop
     PYTHONPATH=src python examples/serve_decode.py --check    # parity
     PYTHONPATH=src python examples/serve_decode.py --paged --pages 16
+    PYTHONPATH=src python examples/serve_decode.py --paged --prefix-cache \
+        --prefill-chunk 16 --preempt          # §12.2 front-end scheduler
     PYTHONPATH=src python examples/serve_decode.py --temperature 0.8 --top-k 20
 
 ``--serial`` keeps the old request-at-a-time loop (the parity oracle);
@@ -63,6 +65,15 @@ def main():
     ap.add_argument("--pages", type=int, default=None,
                     help="pool size in pages (--paged; default = the "
                     "contiguous worst case, fewer pages = backpressure)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share page-aligned prompt prefixes read-only "
+                    "across requests (--paged; §12.2)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prefill at most N prompt tokens per tick, "
+                    "interleaved with decode (--paged)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="evict the youngest live request to host staging "
+                    "when the FIFO head starves (--paged)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy, bit-identical)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -81,7 +92,8 @@ def main():
                 model, params=None, n_slots=args.slots,
                 capacity=args.capacity, page_size=args.page_size,
                 n_pages=args.pages, cache_update=args.cache_update,
-                sampler=sampler)
+                sampler=sampler, prefix_cache=args.prefix_cache,
+                prefill_chunk=args.prefill_chunk, preempt=args.preempt)
         else:
             serve_loop = ServeLoop(model, params=None, n_slots=args.slots,
                                    capacity=args.capacity,
@@ -137,6 +149,11 @@ def main():
     if args.paged and not args.serial:
         print(f"pool: {stats['peak_pages']}/{stats['n_pages']} peak pages "
               f"of {stats['page_size']} rows")
+        if args.prefix_cache or args.prefill_chunk or args.preempt:
+            print(f"scheduler: {stats['prefix_hit_tokens']} prefix-hit "
+                  f"tokens, {stats['prefilled_tokens']} prefilled, "
+                  f"{stats['extend_dispatches']} chunk dispatches, "
+                  f"{stats['preemptions']} preemptions")
     print("first request ids:", np.asarray(reqs[0].out))
 
 

@@ -24,6 +24,11 @@ if [ "$MODE" = fast ]; then
   # asserts paged==contiguous greedy streams for BOTH cache_update
   # paths (mask and kernel) on every CI run
   python benchmarks/serve_paged.py --smoke
+  echo "== smoke: benchmarks/serve_slo.py (scheduler parity) =="
+  # the §12.2 front-end scheduler acceptance gate: prefix caching,
+  # two chunk widths and FORCED preemption must all stay bit-identical
+  # to the SerialLoop oracle
+  python benchmarks/serve_slo.py --smoke
   echo "== smoke: benchmarks/buffered_round.py (buffered==sync parity) =="
   # the buffered-async acceptance gate: waves=1 + instant arrivals +
   # grad_decay=1.0 must reproduce the sync TrainDriver's tau trace
@@ -55,6 +60,8 @@ if [ "$MODE" = "all" ]; then
   python benchmarks/serve_loop.py --smoke
   echo "== smoke: benchmarks/serve_paged.py =="
   python benchmarks/serve_paged.py --smoke
+  echo "== smoke: benchmarks/serve_slo.py =="
+  python benchmarks/serve_slo.py --smoke
   echo "== smoke: scripts/profile.sh (env harness + kernel parity) =="
   bash scripts/profile.sh --smoke
 fi

@@ -21,6 +21,30 @@ def _scalarize(v):
     return v
 
 
+def percentile(values, q: float) -> float:
+    """Seedless linear-interpolation percentile (q in [0, 100]); NaN on
+    an empty sample so SLO reports never crash on a zero-request bucket."""
+    arr = np.asarray(list(values), np.float64).reshape(-1)
+    if arr.size == 0:
+        return float("nan")
+    return float(np.percentile(arr, q))
+
+
+def latency_summary(values, prefix: str = "") -> Dict[str, float]:
+    """p50/p95/p99/mean/n over a latency sample, keys prefixed — the
+    shape benchmarks/serve_slo.py emits per variant (ttft_p99, itl_p50,
+    ...). Deterministic: pure order statistics, no sampling."""
+    arr = np.asarray(list(values), np.float64).reshape(-1)
+    n = int(arr.size)
+    return {
+        f"{prefix}p50": percentile(arr, 50),
+        f"{prefix}p95": percentile(arr, 95),
+        f"{prefix}p99": percentile(arr, 99),
+        f"{prefix}mean": float(arr.mean()) if n else float("nan"),
+        f"{prefix}n": n,
+    }
+
+
 class RunLogger:
     def __init__(self, path: Optional[str] = None, name: str = "run"):
         self.rows: List[Dict[str, Any]] = []

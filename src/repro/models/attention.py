@@ -325,7 +325,8 @@ def paged_decode_attention_block(cfg, p, x, pool: PagedKVPool, page_table,
     pool per batch row (B x n_pages x page_size), which is the paged
     loop's extra per-tick cost at generous pool sizes; "scatter" writes
     ``pool.at[phys, row]`` directly (masked rows route to an out-of-
-    bounds index and are dropped; pages are slot-exclusive so live
+    bounds index and are dropped; pages are write-exclusive — prefix
+    caching aliases pages across slots for READS only — so live
     writes never collide) —
     cheaper unsharded, same bits. A slot whose target page is unallocated
     (-1) drops the write either way (the host allocator guarantees live
@@ -370,8 +371,11 @@ def paged_decode_attention_block(cfg, p, x, pool: PagedKVPool, page_table,
             & (jnp.arange(ps, dtype=jnp.int32)[None, None, :] == (idx % ps)[:, None, None])
         if active is not None:
             sel &= active[:, None, None]
-        # pages are slot-exclusive: the sum over B has at most one non-zero
-        # term per (page, row), so the write is exact (1.0 * k_new + zeros)
+        # pages are WRITE-exclusive: prefix caching may alias a page into
+        # several slots' tables, but decode writes land at idx >= plen —
+        # pages past every shared prefix — so the sum over B still has at
+        # most one non-zero term per (page, row) and the write is exact
+        # (1.0 * k_new + zeros)
         selv = sel.astype(k_new.dtype)
         k_pool = jnp.where(sel.any(0)[..., None, None],
                            jnp.einsum("bnr,bhd->nrhd", selv, k_new[:, 0]), pool.k)
@@ -399,6 +403,74 @@ def paged_decode_attention_block(cfg, p, x, pool: PagedKVPool, page_table,
     w = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", w.astype(v.dtype), v)
     o = o.reshape(B, 1, cfg.q_dim)
+    return o @ p["w_o"], new_pool
+
+
+def paged_prefill_attention_block(cfg, p, x, pool: PagedKVPool, page_row,
+                                  start, length, cache_update: str = "mask"):
+    """Chunked/suffix prefill straight into the page pool: one batch-1
+    chunk of ``C`` tokens covering absolute positions ``[start, start +
+    length)`` of a single slot. x [1, C, d]; page_row [P] int32 (-1 =
+    unallocated); start/length traced int32 scalars (one compile per
+    chunk WIDTH, any start/length). Rows >= ``length`` are padding:
+    never written, outputs garbage the caller ignores.
+
+    Write-then-read: the chunk's K/V land in their pages first, then the
+    slot's pages are gathered and attended with the same arithmetic
+    validity as :func:`paged_decode_attention_block` (entry ``j`` valid
+    iff its page is allocated and ``j <= start + i`` for query row
+    ``i``) — so within-chunk causal attention, earlier chunks, AND
+    prefix-cached shared pages all come out of the pool. Masked entries
+    contribute exact zeros, and every valid row was written by a prior
+    chunk / the shared prefix (page aliasing is read-only: decode and
+    chunk writes only ever target the slot's PRIVATE suffix pages), so
+    the outputs are bit-identical to a monolithic prefill of the same
+    prompt — full attention only (the SWA ring wraps decode writes into
+    early pages; callers gate on ``sliding_window``).
+    """
+    B, C, _ = x.shape
+    N, ps, Hkv, hd = pool.k.shape
+    P = page_row.shape[0]
+    positions = start + jnp.arange(C, dtype=jnp.int32)  # [C]
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions, cfg.rope)
+
+    row_ok = jnp.arange(C, dtype=jnp.int32) < length  # [C] real chunk rows
+    idx = positions  # full attention: entry i holds absolute position i
+    phys = page_row[jnp.clip(idx // ps, 0, P - 1)]  # [C] physical pages
+    if cache_update == "scatter":
+        ok = row_ok & (phys >= 0)
+        phys_w = jnp.where(ok, phys, N)  # N is out of bounds -> dropped
+        k_pool = pool.k.at[phys_w, idx % ps].set(k_new[0], mode="drop")
+        v_pool = pool.v.at[phys_w, idx % ps].set(v_new[0], mode="drop")
+    else:  # "mask" (the kernel decode loop reuses it for chunk writes)
+        sel = (jnp.arange(N, dtype=jnp.int32)[None, :] == phys[:, None])[:, :, None] \
+            & (jnp.arange(ps, dtype=jnp.int32)[None, None, :] == (idx % ps)[:, None, None])
+        sel &= row_ok[:, None, None]  # [C, N, ps]
+        # chunk rows target distinct (page, row) cells and suffix pages are
+        # slot-private, so the sum has at most one non-zero term per cell
+        selv = sel.astype(k_new.dtype)
+        k_pool = jnp.where(sel.any(0)[..., None, None],
+                           jnp.einsum("cnr,chd->nrhd", selv, k_new[0]), pool.k)
+        v_pool = jnp.where(sel.any(0)[..., None, None],
+                           jnp.einsum("cnr,chd->nrhd", selv, v_new[0]), pool.v)
+    new_pool = PagedKVPool(k_pool, v_pool)
+
+    safe_pt = jnp.maximum(page_row, 0)
+    cap = P * ps
+    k = k_pool[safe_pt].reshape(1, cap, Hkv, hd)
+    v = v_pool[safe_pt].reshape(1, cap, Hkv, hd)
+    j = jnp.arange(cap, dtype=jnp.int32)
+    alloc = jnp.repeat(page_row >= 0, ps)
+    valid = alloc[None, :] & (j[None, :] <= positions[:, None])  # [C, cap]
+
+    G = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(1, C, Hkv, G, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    logits *= 1.0 / math.sqrt(hd)
+    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+    o = o.reshape(1, C, cfg.q_dim)
     return o @ p["w_o"], new_pool
 
 

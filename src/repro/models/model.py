@@ -35,6 +35,9 @@ class Model(NamedTuple):
     # paged-KV decode path (DESIGN.md §12; None for toy/audio families)
     paged_decode_step: Optional[Callable] = None
     init_paged_cache: Optional[Callable] = None
+    # chunk/suffix prefill straight into the page pool (DESIGN.md §12.2;
+    # full-attention KV-only models — the function itself gates)
+    paged_prefill_chunk: Optional[Callable] = None
 
 
 def _lm_input_specs(cfg: ArchConfig, shape: ShapeConfig, *, per_device_batch=None):
@@ -119,6 +122,7 @@ def build_model(cfg: ArchConfig) -> Model:
         input_specs=functools.partial(_lm_input_specs, cfg),
         paged_decode_step=functools.partial(transformer.paged_decode_step, cfg),
         init_paged_cache=functools.partial(transformer.init_paged_cache, cfg),
+        paged_prefill_chunk=functools.partial(transformer.paged_prefill_chunk, cfg),
     )
 
 

@@ -403,6 +403,67 @@ def paged_decode_step(cfg, p, cache: PagedDecodeCache, page_table, token, pos,
     return logits, PagedDecodeCache(kv=kv, ssm=ssm_st)
 
 
+def paged_prefill_chunk(cfg, p, cache: PagedDecodeCache, page_row, tokens,
+                        start, length, unroll=1, cache_update: str = "mask"):
+    """Prefill one chunk of a single request's prompt DIRECTLY into the
+    paged pool (serve/ prefix caching + chunked prefill; DESIGN.md §12.2).
+
+    tokens [1, C] covers absolute positions ``[start, start + length)``
+    of the slot whose page-table row is ``page_row`` [P]; rows >= length
+    are padding (never written). start/length are traced int32 scalars —
+    one compile per chunk WIDTH C. Returns (logits [1, V] at position
+    ``start + length - 1``, new cache): the logits only matter for the
+    FINAL chunk of a prompt, where they produce the first generated
+    token exactly like a monolithic prefill.
+
+    Earlier context (previous chunks, prefix-cached shared pages) is
+    read back from the pool; param_dtype == compute_dtype makes that
+    roundtrip the identity, so chunked streams are bit-identical to the
+    monolithic prefill path. Full-attention KV-only models ONLY:
+    recurrent state (SSM / hybrid) absorbs the whole prompt at once and
+    cannot resume from pool pages; the SWA ring wraps writes into early
+    pages that chunk boundaries would tear.
+    """
+    if cfg.family == "ssm" or cfg.hybrid_parallel_ssm:
+        raise ValueError(
+            f"{cfg.name}: recurrent state cannot be chunk-prefilled — "
+            "the SSM carry does not live in pool pages")
+    if cfg.sliding_window:
+        raise ValueError(
+            f"{cfg.name}: chunked prefill is full-attention only — the SWA "
+            "ring wraps KV writes into early (possibly shared) pages")
+    B, C = tokens.shape
+    positions = start + jnp.arange(C, dtype=jnp.int32)
+    h = p["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))  # [1, C, d]
+    if cfg.learned_pos:
+        h = h + p["pos_embed"][positions][None].astype(h.dtype)
+    # pad rows must not compete for MoE expert capacity
+    live = (jnp.arange(C, dtype=jnp.int32) < length)[None, :]  # [1, C]
+    cu = "mask" if cache_update == "kernel" else cache_update
+
+    def body(carry, xs_):
+        h = carry
+        lp, kv_l = xs_
+        hn = apply_norm(cfg, lp["norm1"], h)
+        a_out, kv_new = attn.paged_prefill_attention_block(
+            cfg, lp["attn"], hn, kv_l, page_row, start, length,
+            cache_update=cu)
+        h = h + a_out
+        hn2 = apply_norm(cfg, lp["norm2"], h)
+        if cfg.is_moe:
+            y, _ = moe_mod.moe_apply(cfg, lp["moe"], hn2, token_mask=live)
+            h = h + y
+        elif cfg.d_ff:
+            h = h + mlp_apply(cfg, lp["mlp"], hn2)
+        return h, kv_new
+
+    h, kv = jax.lax.scan(body, h, (p["layers"], cache.kv), unroll=unroll)
+    last = jnp.take_along_axis(
+        h, jnp.maximum(length - 1, 0).reshape(1, 1, 1), axis=1)  # [1,1,d]
+    logits = unembed(cfg, p, last)[:, 0]
+    return logits, PagedDecodeCache(kv=kv, ssm=cache.ssm)
+
+
 def insert_cache_pages(cache: PagedDecodeCache, one: DecodeCache, slot,
                        page_ids, cache_update: str = "mask") -> PagedDecodeCache:
     """Page-granular admission: write one request's prefill cache (batch 1)

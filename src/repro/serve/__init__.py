@@ -2,7 +2,8 @@
 
 Public surface:
   * ``Request`` / ``RequestQueue`` / ``SlotTable`` — host-side slot table;
-  * ``PageAllocator`` — free-list over the shared KV page pool;
+  * ``PageAllocator`` — refcounted free-list over the shared KV page pool;
+  * ``PrefixCache`` — content-addressed read-only prefix page sharing;
   * ``ServeLoop`` — admission + slot-masked decode_step + retirement;
   * ``PagedServeLoop`` — pooled-page KV variant (per-slot page tables,
     admission backpressure when the pool is exhausted);
@@ -22,6 +23,7 @@ from repro.serve.loop import (
 from repro.serve.sampling import GREEDY, SamplerConfig
 from repro.serve.slots import (
     PageAllocator,
+    PrefixCache,
     Request,
     RequestQueue,
     SlotTable,
@@ -32,6 +34,7 @@ __all__ = [
     "GREEDY",
     "PageAllocator",
     "PagedServeLoop",
+    "PrefixCache",
     "Request",
     "RequestQueue",
     "SamplerConfig",

@@ -33,9 +33,11 @@ tests/test_serve_loop.py and tests/test_serve_paged.py.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
-from typing import Dict, Optional, Sequence
+from collections import deque
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -45,10 +47,13 @@ import numpy as np
 # so the warning doesn't fire once per serve dispatch
 from repro.core.engine import _quiet_donation
 from repro.core.scheduler import AdmissionScheduler
+from repro.models.attention import KVCache
 from repro.models.model import Model, decode_capability
-from repro.models.transformer import insert_cache_pages, insert_cache_slot
+from repro.models.transformer import (DecodeCache, insert_cache_pages,
+                                      insert_cache_slot)
 from repro.serve.sampling import GREEDY, SamplerConfig, make_sample_fn
-from repro.serve.slots import PageAllocator, Request, RequestQueue, SlotTable
+from repro.serve.slots import (PageAllocator, PrefixCache, Request,
+                               RequestQueue, SlotTable)
 
 
 class ServeUnsupportedError(RuntimeError):
@@ -188,6 +193,8 @@ class ServeLoop(AdmissionScheduler):
         self._queue: Optional[RequestQueue] = None
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
+        self.prefilled_tokens = 0  # real prompt rows sent through prefill
+        self.tick_walls: List[float] = []  # wall clock at each tick start
         self.rejected = []
 
     # -- admission -----------------------------------------------------------
@@ -217,6 +224,7 @@ class ServeLoop(AdmissionScheduler):
             self.params, batch, jnp.full((1,), plen, jnp.int32),
             jnp.full((1,), req.rid, jnp.int32))
         self.prefill_dispatches += 1
+        self.prefilled_tokens += plen
         return int(first[0]), one
 
     def _insert_request(self, slot: int, req: Request, one):
@@ -225,6 +233,16 @@ class ServeLoop(AdmissionScheduler):
 
     def _retire(self, slot: int):
         self.table.retire(slot, self.t)
+
+    def _begin_request(self, slot: int, req: Request):
+        """Prefill + cache insert + slot bind for one admitted request;
+        instantly-finished requests (max_new == 1 / instant EOS) retire
+        in place so the slot is reconsidered by the caller's loop."""
+        first, one = self._prefill(req)
+        self._insert_request(slot, req, one)
+        self.table.admit(slot, req, first, self.t)
+        if req.finished():
+            self._retire(slot)
 
     def _admit(self):
         """Fill free slots from the arrived queue; loops until no slot or
@@ -253,12 +271,7 @@ class ServeLoop(AdmissionScheduler):
             if not self._can_admit(req):
                 return
             queue.pop_arrived(self.t)
-            slot = free[0]
-            first, one = self._prefill(req)
-            self._insert_request(slot, req, one)
-            self.table.admit(slot, req, first, self.t)
-            if req.finished():  # max_new == 1 or instant EOS
-                self._retire(slot)
+            self._begin_request(free[0], req)
 
     # -- one tick ------------------------------------------------------------
     def _dispatch_decode(self, rid, nstep):
@@ -306,6 +319,10 @@ class ServeLoop(AdmissionScheduler):
         batch next tick instead of idling a full tick)."""
         if queue is not None:
             self._queue = queue
+        # tick_walls[t] = wall clock when tick t began: arrival-to-first-
+        # token latency (TTFT) = req.tok_walls[0] - tick_walls[req.arrival]
+        # (benchmarks/serve_slo.py)
+        self.tick_walls.append(time.time())
         super().tick()
 
     def _extra_stats(self) -> Dict:
@@ -331,10 +348,34 @@ class ServeLoop(AdmissionScheduler):
             tok_s=toks / max(wall, 1e-9),
             decode_dispatches=self.decode_dispatches,
             prefill_dispatches=self.prefill_dispatches,
+            prefilled_tokens=self.prefilled_tokens,
             failed=len(self.rejected),
             failed_rids=[r.rid for r in self.rejected],
             **self._extra_stats(),
         )
+
+
+@dataclasses.dataclass
+class _PrefillJob:
+    """An admitted request whose prompt is still being chunk-prefilled:
+    its slot holds pool pages and a page-table row but is NOT yet live in
+    the SlotTable (decode skips it) until the last chunk lands."""
+    req: Request
+    done: int  # prompt rows already in the pool (prefix hits + chunks)
+
+
+@dataclasses.dataclass
+class _Preempted:
+    """An evicted mid-decode request staged on host (DESIGN.md §12.2):
+    its pool pages were copied out verbatim and freed; restore allocates
+    fresh pages, writes the staged rows back and rebinds the slot —
+    decode resumes bit-identically (content is position-addressed through
+    the page table, physical page ids never enter the math)."""
+    req: Request
+    k: np.ndarray  # [L, pages_per_slot, page_size, Hkv, hd] staged pages
+    v: np.ndarray
+    ssm: object  # hybrid models' per-slot recurrent row, or None
+    pages: int  # allocated pages to re-acquire on restore
 
 
 class PagedServeLoop(ServeLoop):
@@ -370,13 +411,44 @@ class PagedServeLoop(ServeLoop):
     [B, P*page_size, ...] gather, no full-pool selector); greedy streams
     stay bit-identical to "mask" (tests/test_paged_kernel.py and the
     serve_paged.py --smoke CI stage assert it).
+
+    Front-end scheduler features (DESIGN.md §12.2; all default OFF, all
+    greedy-parity-preserving — per-request fold_in sample streams make
+    token streams scheduling-independent, so only KV corruption could
+    break parity, and the tests force each feature and assert none does):
+
+      prefix_cache: content-addressed page sharing. Admission looks up
+        the prompt's page-aligned prefixes in a host :class:`PrefixCache`;
+        hit pages are aliased read-only into the new slot's page table
+        (refcounted in the ``PageAllocator``) and only the SUFFIX is
+        prefilled straight into the pool via ``paged_prefill_chunk``.
+        Decode writes land past every shared prefix (pages are
+        write-exclusive), so no copy-on-write is ever needed.
+      prefill_chunk: admission prefills at most ``prefill_chunk`` prompt
+        tokens per tick (one fixed-width compile), interleaved with
+        decode — a long prompt no longer stalls every live stream for a
+        full-prompt prefill dispatch (bounded per-tick latency).
+      preempt: when the pool is exhausted and the FIFO head has been
+        blocked for ``preempt_after`` ticks, the youngest live request
+        (largest page footprint tiebreak) is evicted — its pages staged
+        to host buffers and freed — and re-admitted with priority once
+        pages free up. Head-of-line blocking cannot starve the queue.
+
+    prefix_cache / prefill_chunk require full attention (the SWA ring
+    wraps decode writes into early — possibly shared — pages), KV-only
+    models (recurrent carries don't live in pool pages) and text-only
+    prompts; preemption works for every paged family (hybrid SSM rows are
+    staged alongside the pages).
     """
 
     def __init__(self, model: Model, params, *, n_slots: int = 8,
                  capacity: int = 256, page_size: int = 16,
                  n_pages: Optional[int] = None, bucket: int = 16,
                  cache_update: str = "mask", unroll: int = 1,
-                 sampler: Optional[SamplerConfig] = None):
+                 sampler: Optional[SamplerConfig] = None,
+                 prefix_cache: bool = False,
+                 prefill_chunk: Optional[int] = None,
+                 preempt: bool = False, preempt_after: int = 2):
         _check_servable(model)
         cfg = model.config
         if cfg.family == "ssm" or model.init_paged_cache is None:
@@ -392,6 +464,29 @@ class PagedServeLoop(ServeLoop):
             capacity = self.pages_per_slot * page_size
         self.n_pages = n_slots * self.pages_per_slot if n_pages is None \
             else n_pages
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        self.prefix_cache_on = bool(prefix_cache)
+        self.prefill_chunk = prefill_chunk
+        self.preempt, self.preempt_after = bool(preempt), preempt_after
+        # pool-direct suffix/chunk prefill path (vs legacy whole-prompt
+        # prefill-then-insert); preempt alone keeps the legacy prefill
+        self._use_extend = self.prefix_cache_on or prefill_chunk is not None
+        self._sched_on = self._use_extend or self.preempt
+        if self._use_extend:
+            why = None
+            if cfg.sliding_window:
+                why = ("the SWA ring wraps KV writes into early (possibly "
+                       "shared) pages")
+            elif cfg.family == "ssm" or cfg.hybrid_parallel_ssm:
+                why = "recurrent carries do not live in pool pages"
+            elif cfg.vision_dim:
+                why = ("vlm patch splicing needs the whole prompt in one "
+                       "prefill dispatch")
+            if why is not None:
+                raise ServeUnsupportedError(
+                    f"{cfg.name}: prefix caching / chunked prefill is "
+                    f"full-attention text-only — {why}")
         super().__init__(model, params, n_slots=n_slots, capacity=capacity,
                          bucket=bucket, cache_update=cache_update,
                          unroll=unroll, sampler=sampler)
@@ -410,6 +505,29 @@ class PagedServeLoop(ServeLoop):
             functools.partial(insert_cache_pages, cache_update=cache_update),
             donate_argnums=(0,))
         self._build_prefill(model)
+        if self._use_extend:
+            # chunk writes reuse the mask path under "kernel" (decode still
+            # dispatches the Pallas kernel); start/length are traced scalars
+            # so there is ONE compile per chunk width, not per (start, len)
+            cu = "mask" if cache_update == "kernel" else cache_update
+            unroll_ = unroll
+
+            def _extend(p, cache, row, toks, start, length, rid):
+                logits, new_cache = model.paged_prefill_chunk(
+                    p, cache, row, toks, start, length, unroll=unroll_,
+                    cache_update=cu)
+                # completion chunk holds row plen-1: its logits seed the
+                # stream at sample index 0 (intermediate chunks' samples
+                # are discarded by the driver)
+                return sample(logits, rid, jnp.zeros_like(rid)), new_cache
+
+            self._extend = jax.jit(_extend, donate_argnums=(1,))
+        if self.preempt:
+            def _stage(cache, row):
+                safe = jnp.maximum(row, 0)  # -1 rows gathered then ignored
+                return cache.kv.k[:, safe], cache.kv.v[:, safe]
+
+            self._stage = jax.jit(_stage)
 
     def _init_cache(self):
         self.allocator = PageAllocator(self.n_pages, self.page_size)
@@ -417,6 +535,24 @@ class PagedServeLoop(ServeLoop):
                                   np.int32)
         return self.model.init_paged_cache(self.n_slots, self.n_pages,
                                            self.page_size)
+
+    def reset(self):
+        super().reset()
+        self._prefilling: Dict[int, _PrefillJob] = {}
+        self._preempted: deque = deque()
+        self._blocked_since: Optional[int] = None
+        self._chunk_left: Optional[int] = None
+        self._admit_plan = None
+        self.prefix = PrefixCache(self.allocator) if self.prefix_cache_on \
+            else None
+        self.prefix_hit_tokens = 0
+        self.preemptions = 0
+        self.extend_dispatches = 0
+        self.restore_dispatches = 0
+
+    def tick(self, queue: Optional[RequestQueue] = None):
+        self._chunk_left = self.prefill_chunk  # per-tick chunk token budget
+        super().tick(queue)
 
     def _rows_needed(self, req: Request) -> int:
         rows = req.plen + req.max_new - 1
@@ -454,6 +590,224 @@ class PagedServeLoop(ServeLoop):
         self.page_table[slot] = -1
         super()._retire(slot)
 
+    # -- front-end scheduler (DESIGN.md §12.2) -------------------------------
+    def _admit(self):
+        """Scheduler admission order: (1) advance in-flight chunk-prefill
+        jobs (they hold pages — finishing them frees decode throughput
+        first), (2) restore preempted requests FIFO (they already burned
+        prefill work), (3) admit new requests FIFO. A blocked head
+        triggers prefix-cache eviction, then — after ``preempt_after``
+        stalled ticks — slot preemption."""
+        if not self._sched_on:
+            super()._admit()
+            return
+        self._advance_prefills()
+        queue = self._queue
+        while True:
+            free = [s for s in self.table.free_slots()
+                    if s not in self._prefilling]
+            if not free:
+                return
+            if self._preempted:
+                ent = self._preempted[0]
+                if not self._ensure_pages(ent.pages):
+                    if not self._try_preempt(ent.pages):
+                        return
+                    continue
+                self._preempted.popleft()
+                self._blocked_since = None
+                self._restore(free[0], ent)
+                continue
+            if queue is None:
+                return
+            req = queue.peek_arrived(self.t)
+            if req is None:
+                return
+            err = self._admission_error(req)
+            if err is not None:
+                queue.pop_arrived(self.t)
+                req.failed = f"request {req.rid}: {err}"
+                req.done_tick = self.t
+                self.rejected.append(req)
+                continue
+            if not self._plan_admission(req):
+                if not self._try_preempt(self._short_pages):
+                    return
+                continue
+            queue.pop_arrived(self.t)
+            self._blocked_since = None
+            if self._use_extend:
+                self._start_job(free[0], req)
+            else:
+                self._admit_plan = None
+                self._begin_request(free[0], req)
+
+    def _plan_admission(self, req: Request) -> bool:
+        """Can the head request start NOW? Pins its prefix-cache hits
+        (``share`` BEFORE any eviction can free them), then checks the
+        pool covers the private remainder — evicting cache-only pages if
+        short. On success the plan (shared pages, total need) is stashed
+        for ``_start_job``; on failure the pins are released."""
+        need = self.allocator.pages_for(self._rows_needed(req))
+        shared: List[int] = []
+        if self.prefix is not None:
+            shared = self.prefix.lookup(req.tokens)
+            self.allocator.share(shared)
+        if self._ensure_pages(need - len(shared)):
+            self._admit_plan = (req.rid, shared, need)
+            return True
+        if shared:
+            self.allocator.free(shared)
+        self._short_pages = need - len(shared)
+        return False
+
+    def _ensure_pages(self, n: int) -> bool:
+        """Free pool pages >= n, evicting LRU cache-only prefix pages
+        (refcount 1) to close a shortfall — cached prefixes are a
+        best-effort optimization, live work is not."""
+        short = n - self.allocator.free_pages
+        if short > 0 and self.prefix is not None:
+            self.prefix.evict_for(short)
+        return self.allocator.free_pages >= n
+
+    def _try_preempt(self, need_pages: int) -> bool:
+        """The head has been refused pages: start (or continue) the
+        blocked clock, and once it has stalled ``preempt_after`` ticks,
+        evict the youngest live request (most-pages tiebreak — youngest
+        loses the least progress, largest frees the most) until the head
+        fits. Returns True when pages were freed and the head now fits."""
+        if self._blocked_since is None:
+            self._blocked_since = self.t
+        if not self.preempt or \
+                self.t - self._blocked_since < self.preempt_after:
+            return False
+        evicted = False
+        while not self._ensure_pages(need_pages):
+            victims = [s for s in self.table.live_slots()
+                       if s not in self._prefilling]
+            if not victims:
+                return False
+            victim = max(victims, key=lambda s: (
+                self.table.req[s].admit_tick,
+                int((self.page_table[s] >= 0).sum()), s))
+            self._evict(victim)
+            evicted = True
+        return evicted
+
+    def _evict(self, slot: int):
+        """Preempt a live slot: stage its pool pages (and hybrid SSM row)
+        to host buffers, unbind the slot, free the pages. The request
+        resumes — bit-identically — via ``_restore``."""
+        row = self.page_table[slot].copy()
+        k, v = self._stage(self.cache, jnp.asarray(row))
+        ssm = None
+        if self.cache.ssm is not None:
+            ssm = jax.device_get(
+                jax.tree.map(lambda x: x[:, slot], self.cache.ssm))
+        self._preempted.append(_Preempted(
+            req=self.table.evict(slot), k=np.asarray(k), v=np.asarray(v),
+            ssm=ssm, pages=int((row >= 0).sum())))
+        self.allocator.free(row)
+        self.page_table[slot] = -1
+        self.preemptions += 1
+
+    def _restore(self, slot: int, ent: _Preempted):
+        """Re-admit a preempted request: fresh pages, staged rows written
+        back verbatim (page content is position-addressed through the
+        page table — physical ids never enter the math), slot rebound."""
+        ids = self.allocator.alloc(ent.pages)
+        assert ids is not None, "restore raced the allocator"
+        row = np.full(self.pages_per_slot, -1, np.int32)
+        row[:ent.pages] = ids
+        self.page_table[slot] = row
+        L, P, ps, Hkv, hd = ent.k.shape
+        one = DecodeCache(
+            kv=KVCache(k=jnp.asarray(ent.k).reshape(L, 1, P * ps, Hkv, hd),
+                       v=jnp.asarray(ent.v).reshape(L, 1, P * ps, Hkv, hd),
+                       pos=jnp.zeros((L, 1, P * ps), jnp.int32)),
+            ssm=jax.tree.map(lambda x: jnp.asarray(x)[:, None], ent.ssm)
+            if ent.ssm is not None else None,
+            xlstm_m=None, xlstm_s=None)
+        with _quiet_donation():
+            self.cache = self._insert(self.cache, one, jnp.int32(slot),
+                                      jnp.asarray(row))
+        self.table.rebind(slot, ent.req)
+        self.restore_dispatches += 1
+
+    def _start_job(self, slot: int, req: Request):
+        """Begin pool-direct admission: bind shared prefix pages + freshly
+        allocated private pages into the slot's page-table row, then run
+        the suffix through the chunk-prefill budget."""
+        rid, shared, need = self._admit_plan
+        assert rid == req.rid, "admission plan raced the queue"
+        self._admit_plan = None
+        priv = self.allocator.alloc(need - len(shared))
+        assert priv is not None, "admission raced the allocator"
+        row = np.full(self.pages_per_slot, -1, np.int32)
+        row[:len(shared)] = shared
+        row[len(shared):need] = priv
+        self.page_table[slot] = row
+        hit = len(shared) * self.page_size
+        self.prefix_hit_tokens += hit
+        self._prefilling[slot] = _PrefillJob(req=req, done=hit)
+        self._advance_job(slot)
+
+    def _advance_prefills(self):
+        for slot in list(self._prefilling):
+            self._advance_job(slot)
+
+    def _advance_job(self, slot: int):
+        """Push one prefill job forward within this tick's chunk budget;
+        on the last chunk (the one holding prompt row plen-1) its sampled
+        logits seed the output stream and the slot goes live."""
+        job = self._prefilling[slot]
+        req, row = job.req, self.page_table[slot]
+        first = None
+        while job.done < req.plen:
+            remaining = req.plen - job.done
+            if self.prefill_chunk is None:  # suffix in one bucketed shot
+                step = remaining
+                width = min(_round_up(remaining, self.bucket), self.capacity)
+            else:
+                if self._chunk_left is not None and self._chunk_left <= 0:
+                    return  # budget spent; the job resumes next tick
+                step = min(self.prefill_chunk, remaining)
+                width = self.prefill_chunk  # fixed width: one compile
+            toks = np.zeros((1, width), np.int32)
+            toks[0, :step] = req.tokens[job.done:job.done + step]
+            first = self._dispatch_extend(row, toks, job.done, step, req.rid)
+            job.done += step
+            self.prefilled_tokens += step
+            if self._chunk_left is not None:
+                self._chunk_left -= step
+        del self._prefilling[slot]
+        self.table.admit(slot, req, first, self.t)
+        if self.prefix is not None:
+            self.prefix.register(req.tokens, row, req.plen)
+        if req.finished():  # max_new == 1 or instant EOS
+            self._retire(slot)
+
+    def _dispatch_extend(self, row, toks, start, length, rid) -> int:
+        with _quiet_donation():
+            first, self.cache = self._extend(
+                self.params, self.cache, jnp.asarray(row),
+                jnp.asarray(toks), jnp.int32(start), jnp.int32(length),
+                jnp.full((1,), rid, jnp.int32))
+        self.extend_dispatches += 1
+        return int(first[0])
+
+    def _pending(self) -> bool:
+        return super()._pending() or bool(self._prefilling) \
+            or bool(self._preempted)
+
+    def check_invariants(self):
+        """Full refcount-conservation audit: every in-use page's refcount
+        must equal its page-table references plus its prefix-cache pin
+        (tests call this mid-churn)."""
+        self.allocator.check(
+            page_tables=list(self.page_table),
+            cached_pages=self.prefix.pages if self.prefix else None)
+
     def _dispatch_decode(self, rid, nstep):
         table = self.table
         with _quiet_donation():
@@ -470,6 +824,11 @@ class PagedServeLoop(ServeLoop):
             page_size=self.page_size,
             kv_rows=self.n_pages * self.page_size,
             peak_pages=self.allocator.peak_in_use,
+            prefix_hit_tokens=self.prefix_hit_tokens,
+            preemptions=self.preemptions,
+            extend_dispatches=self.extend_dispatches,
+            restore_dispatches=self.restore_dispatches,
+            prefix_pages=len(self.prefix) if self.prefix else 0,
         )
 
 

@@ -163,9 +163,13 @@ def batch_specs(batch: Any, mesh: Mesh, batch_axes=("pod", "data")) -> Any:
 
 def paged_cache_specs(cache: Any, mesh: Mesh, cache_update: str = "mask") -> Any:
     """Paged decode-cache sharding: pool leaves are [L, n_pages, page_size,
-    Hkv, hd]. Pages are slot-exclusive and independent, so the PAGE dim
-    takes the data axes (each shard owns a contiguous page range; the
-    one-hot pool writes and page-table gathers stay masked/pass-through)
+    Hkv, hd]. Pages are WRITE-exclusive and independent — prefix caching
+    (serve §12.2) may alias a read-only prefix page into several slots'
+    tables, but every live write (decode row, chunk-prefill row) targets
+    a page owned by exactly one slot — so the PAGE dim takes the data
+    axes (each shard owns a contiguous page range; the one-hot pool
+    writes and page-table gathers stay masked/pass-through, and shared
+    reads are plain gathers that replicate fine)
     and kv-heads take the model axis when divisible. Hybrid SSM leaves
     ([L, B, ...]) batch-shard like the contiguous cache. The page table
     itself ([B, P] int32, host-owned) is replicated — every shard needs

@@ -306,6 +306,65 @@ def make_paged_decode_bundle(model, mesh: Mesh, shape: ShapeConfig, *,
     return StepBundle(jit_fn, make_inputs, "decode_step[paged]")
 
 
+def make_paged_prefill_bundle(model, mesh: Mesh, shape: ShapeConfig, *,
+                              page_size: int = 16,
+                              n_pages: Optional[int] = None,
+                              chunk: int = 16,
+                              cache_update: str = "mask",
+                              unroll: int = 1) -> StepBundle:
+    """Chunk/suffix prefill straight into the page pool (the §12.2
+    scheduler's extend dispatch as a shardable launch seam): one
+    batch-1 chunk of ``chunk`` tokens writes its K/V into the caller's
+    page-table row and attends over all rows already in the pool —
+    prefix-cache-seeded suffix prefill and chunked long-prompt admission
+    compile to this ONE program per chunk width. start/length are traced
+    scalars (replicated), so neither the chunk offset nor the ragged
+    tail retraces.
+    """
+    cfg: ArchConfig = model.config
+    if model.paged_prefill_chunk is None:
+        raise ValueError(f"{cfg.name}: no paged chunk-prefill path")
+    if cfg.sliding_window or cfg.family == "ssm" or cfg.hybrid_parallel_ssm:
+        raise ValueError(f"{cfg.name}: chunk prefill is full-attention "
+                         "KV-only (see models.transformer.paged_prefill_chunk)")
+    W = cfg.sliding_window
+    logical = W if W else shape.seq_len
+    P_slot = -(-logical // page_size)
+    N = shape.global_batch * P_slot if n_pages is None else n_pages
+    cu = "mask" if cache_update == "kernel" else cache_update
+
+    def step(params, cache, page_row, tokens, start, length):
+        with logical_axis_rules(mesh):
+            return model.paged_prefill_chunk(params, cache, page_row, tokens,
+                                             start, length, unroll=unroll,
+                                             cache_update=cu)
+
+    pstruct = params_struct(model)
+    pshard = _ns(mesh, param_specs(pstruct, mesh))
+    cstruct = jax.eval_shape(lambda: model.init_paged_cache(
+        shape.global_batch, N, page_size))
+    cshard = _ns(mesh, paged_cache_specs(cstruct, mesh, cache_update=cu))
+    rep = _replicated(mesh)
+    jit_fn = jax.jit(
+        step,
+        in_shardings=(pshard, cshard, rep, rep, rep, rep),
+        out_shardings=(None, cshard),
+        donate_argnums=(1,),
+    )
+
+    def make_inputs():
+        return (
+            pstruct,
+            cstruct,
+            jax.ShapeDtypeStruct((P_slot,), jnp.int32),
+            jax.ShapeDtypeStruct((1, chunk), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+        )
+
+    return StepBundle(jit_fn, make_inputs, "prefill_chunk[paged]")
+
+
 def build_bundle(model, mesh: Mesh, shape: ShapeConfig, *, kind: Optional[str] = None,
                  **kw) -> StepBundle:
     kind = kind or shape.kind
@@ -316,6 +375,13 @@ def build_bundle(model, mesh: Mesh, shape: ShapeConfig, *, kind: Optional[str] =
             return make_train_step_bundle(model, mesh, shape, **kw)
         return make_fedveca_round_bundle(model, mesh, shape, **kw)
     if kind == "prefill":
+        if kw.pop("paged", False):
+            return make_paged_prefill_bundle(
+                model, mesh, shape, unroll=kw.get("unroll", 1),
+                page_size=kw.get("page_size", 16),
+                n_pages=kw.get("n_pages"),
+                chunk=kw.get("chunk", 16),
+                cache_update=kw.get("cache_update", "mask"))
         return make_prefill_bundle(model, mesh, shape, unroll=kw.get("unroll", 1))
     if kind == "decode":
         if kw.pop("paged", False):
