@@ -1,12 +1,27 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast collect test-sharded ci smoke bench-round-engine \
-	bench-controller-driver bench-sharded bench-buffered bench-serve \
-	bench-serve-paged bench-serve-slo bench-paged-kernel
+.PHONY: test test-fast collect test-sharded ci smoke lint sanitize \
+	bench-round-engine bench-controller-driver bench-sharded \
+	bench-buffered bench-serve bench-serve-paged bench-serve-slo \
+	bench-paged-kernel
 
 test:
 	python -m pytest -x -q
+
+# repro-lint (DESIGN.md §14): src must be clean modulo the justified
+# allowlist, and the fixture corpus must report EXACTLY expected.json
+lint:
+	python -m repro.analysis src \
+		--allowlist src/repro/analysis/allowlist.toml \
+		--fail-unused-allowlist
+	python -m repro.analysis tests/fixtures/repro_lint \
+		--expect tests/fixtures/repro_lint/expected.json
+
+# runtime sanitizer proof: zero steady-state recompiles for a serve
+# tick loop and a train round loop, NaN rounds caught
+sanitize:
+	python -m pytest -x -q tests/test_sanitize.py
 
 test-fast:
 	python -m pytest -x -q -m "not slow"

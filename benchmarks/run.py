@@ -59,6 +59,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale rounds")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
+    ap.add_argument("--list", action="store_true",
+                    help="print available bench names and exit")
     ap.add_argument("--csv-dir", default="experiments/bench_csv")
     ap.add_argument("--force", action="store_true",
                     help="re-measure cached artifacts (roofline: redo the "
@@ -66,8 +68,17 @@ def main() -> None:
                     "experiments/dryrun/*.json)")
     args = ap.parse_args()
 
+    if args.list:
+        for name in BENCHES:
+            print(name)
+        return
+
     scale = FULL if args.full else QUICK
     names = args.only.split(",") if args.only else list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown bench name(s): {', '.join(unknown)} — "
+                 f"available: {', '.join(BENCHES)}")
     os.makedirs(args.csv_dir, exist_ok=True)
 
     rows: list = []

@@ -12,6 +12,21 @@ MODE="${1:-all}"
 echo "== tier-1: pytest collect sanity =="
 python -m pytest --collect-only -q
 
+echo "== repro-lint: src clean modulo justified allowlist (DESIGN.md §14) =="
+python -m repro.analysis src \
+  --allowlist src/repro/analysis/allowlist.toml --fail-unused-allowlist
+
+echo "== repro-lint: fixture corpus reports exactly expected.json =="
+# a rule that silently stops firing fails this stage, not just one
+# that over-fires
+python -m repro.analysis tests/fixtures/repro_lint \
+  --expect tests/fixtures/repro_lint/expected.json
+
+echo "== sanitize: zero steady-state recompiles (serve tick + train round) =="
+# the dynamic half of the lane: after warmup, NOTHING may recompile
+# per tick/round, and a seeded-NaN round must raise, not poison
+python -m pytest -x -q tests/test_sanitize.py
+
 if [ "$MODE" = fast ]; then
   echo "== tier-1 (fast lane): pytest -m 'not slow' =="
   python -m pytest -x -q -m "not slow"

@@ -1,0 +1,39 @@
+"""repro-lint: the repo's own static analysis pass + runtime sanitizer.
+
+Every plane of this reproduction rests on invariants that used to be
+enforced only by convention — donated-buffer discipline, per-client
+``fold_in`` PRNG streams, gather-free shard_map bodies with psum at step
+boundaries only, refcounted page conservation, one-compile-then-steady
+serving programs. This package is the machine checker (DESIGN.md §14):
+
+  * ``engine`` + ``rules_*``: an AST lint pass over the source tree with
+    a rule catalog (R1..R6) codifying the repo's JAX/Pallas hazards,
+    driven by ``python -m repro.analysis`` (text/JSON output, per-rule
+    select/ignore, a justified allowlist, and an ``--expect`` mode that
+    pins the known-bad fixture corpus to its exact findings);
+  * ``sanitize``: the runtime lane — a context manager that arms jax's
+    NaN debugging and tracer-leak checking and counts backend compiles,
+    so drivers can prove "one-time compile, zero steady-state recompiles"
+    per round/tick (``Sanitizer.assert_steady_state``).
+
+The lint half deliberately imports NO jax — linting must stay cheap
+enough to run first in CI and usable on machines without an accelerator
+stack.
+"""
+from repro.analysis.engine import (  # noqa: F401
+    ALL_RULES,
+    LintResult,
+    lint_paths,
+    rule_ids,
+)
+from repro.analysis.findings import AllowEntry, Finding, load_allowlist  # noqa: F401
+
+__all__ = [
+    "ALL_RULES",
+    "AllowEntry",
+    "Finding",
+    "LintResult",
+    "lint_paths",
+    "load_allowlist",
+    "rule_ids",
+]

@@ -1,0 +1,91 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Exit codes: 0 clean (or --expect matched), 1 findings (or --expect
+mismatch), 2 usage/allowlist errors.
+
+--expect pins a corpus to its exact findings: CI runs the linter over
+the known-bad fixtures and asserts every fixture still trips exactly
+the rule lines recorded in expected.json — so a rule that silently
+stops firing fails CI, not just a rule that fires too much.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+from repro.analysis.engine import ALL_RULES, lint_paths, rule_ids
+from repro.analysis.findings import AllowlistError
+
+
+def _parse_rules(value: str) -> List[str]:
+    return [v.strip() for v in value.split(",") if v.strip()]
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: JAX/Pallas-aware static analysis "
+                    "(rules: " + ", ".join(
+                        f"{r.id}={r.name}" for r in ALL_RULES) + ")")
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files/directories to lint (default: src)")
+    parser.add_argument("--format", choices=("text", "json"), default="text")
+    parser.add_argument("--select", type=_parse_rules, default=None,
+                        metavar="R1,R4", help="only run these rules")
+    parser.add_argument("--ignore", type=_parse_rules, default=None,
+                        metavar="R2", help="skip these rules")
+    parser.add_argument("--allowlist", default=None, metavar="TOML",
+                        help="allowlist.toml of justified suppressions")
+    parser.add_argument("--fail-unused-allowlist", action="store_true",
+                        help="error when an allowlist entry suppressed "
+                             "nothing (stale-suppression detector)")
+    parser.add_argument("--expect", default=None, metavar="JSON",
+                        help="expected-findings file: exit 0 iff the run "
+                             "produces exactly these (rule, path, line) "
+                             "triples")
+    parser.add_argument("--rules", action="store_true",
+                        help="print the rule catalog and exit")
+    args = parser.parse_args(argv)
+
+    if args.rules:
+        for r in ALL_RULES:
+            print(f"{r.id}  {r.name:<16} {r.doc}")
+        return 0
+
+    try:
+        result = lint_paths(args.paths, select=args.select,
+                            ignore=args.ignore, allowlist=args.allowlist)
+    except (AllowlistError, ValueError, FileNotFoundError) as e:
+        print(f"repro-lint: error: {e}", file=sys.stderr)
+        return 2
+
+    if args.expect is not None:
+        with open(args.expect, "r", encoding="utf-8") as f:
+            expected = {(e["rule"], e["path"], e["line"])
+                        for e in json.load(f)}
+        got = {(f.rule, f.path, f.line) for f in result.findings}
+        missing = sorted(expected - got)
+        surprise = sorted(got - expected)
+        for rule, path, line in missing:
+            print(f"MISSING  {path}:{line}: {rule} (expected, not found)")
+        for rule, path, line in surprise:
+            print(f"SURPRISE {path}:{line}: {rule} (found, not expected)")
+        status = "OK" if not missing and not surprise else "MISMATCH"
+        print(f"repro-lint --expect: {status} "
+              f"({len(got)} findings vs {len(expected)} expected)")
+        return 0 if status == "OK" else 1
+
+    print(result.to_text() if args.format == "text" else result.to_json())
+    if args.fail_unused_allowlist and result.unused_allowlist():
+        for e in result.unused_allowlist():
+            print(f"repro-lint: stale allowlist entry: {e.rule} {e.path} "
+                  f"(contains={e.contains!r}) suppressed nothing",
+                  file=sys.stderr)
+        return 2
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,290 @@
+"""R2 — donation misuse, R3 — PRNG discipline.
+
+R2: ``jax.jit(fn, donate_argnums=(k,))`` invalidates the k-th argument's
+buffer on dispatch; reading the donated variable afterwards either
+crashes ("buffer has been deleted") or silently reads garbage under
+some backends. The repo's contract (DESIGN.md §4) is rebind-or-drop:
+``state = step(state, ...)``. The rule flags any Load of a donated
+variable after the dispatch line with no intervening rebind.
+
+R3: PRNG keys are single-use. Two ``jax.random.<draw>`` calls consuming
+the same key name without an intervening ``split``/``fold_in`` rebind
+reuse randomness (correlated client batches — exactly the bug class the
+per-client ``fold_in`` streams exist to prevent). Also flags literal
+``PRNGKey(0)``-style constructions outside tests/configs: seeds must
+come from config/CLI so runs are reproducible *and* distinguishable.
+"""
+from __future__ import annotations
+
+import ast
+import posixpath
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis import astutil
+from repro.analysis.astutil import Rule
+from repro.analysis.findings import Finding
+
+# ---------------------------------------------------------------------------
+# R2
+# ---------------------------------------------------------------------------
+
+
+def _donate_argnums(call: ast.Call) -> Tuple[int, ...]:
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            got = astutil.int_tuple(kw.value)
+            if got is not None:
+                return got
+    return ()
+
+
+def _stored_names(stmt: ast.stmt) -> Set[str]:
+    """Names (incl. dotted `self.cache` targets, also inside tuple
+    unpacking) bound by an assignment."""
+    if not isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+        return set()
+    stored = astutil.assign_target_names(stmt)
+    targets = stmt.targets if isinstance(stmt, ast.Assign) else [stmt.target]
+    for t in targets:
+        for node in ast.walk(t):
+            if isinstance(node, ast.Attribute) and \
+                    isinstance(node.ctx, ast.Store):
+                nm = astutil.dotted(node)
+                if nm:
+                    stored.add(nm)
+    return stored
+
+
+class DonationMisuseRule(Rule):
+    id = "R2"
+    name = "donated-read"
+    doc = ("a variable passed at a donate_argnums position must not be "
+           "read after the dispatch without a rebind")
+
+    def check(self, tree: ast.Module, src_lines: List[str], path: str
+              ) -> Iterable[Finding]:
+        # donating-callable names: from jax.jit(fn, donate_argnums=) and
+        # from `g = jax.jit(f, donate_argnums=...)` style assignments
+        # (incl. `self._step = jax.jit(...)`).
+        donating: Dict[str, Tuple[int, ...]] = {}
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if astutil.call_target(node) not in ("jax.jit", "jit", "pjit"):
+                continue
+            nums = _donate_argnums(node)
+            if not nums:
+                continue
+            fn_name = astutil._resolve_fn_arg(node.args[0]) if node.args \
+                else None
+            if fn_name:
+                donating[fn_name] = nums
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    astutil.call_target(node.value) in ("jax.jit", "jit",
+                                                        "pjit"):
+                nums = _donate_argnums(node.value)
+                if nums:
+                    for t in node.targets:
+                        name = astutil.dotted(t)
+                        if name:
+                            donating[name] = nums
+
+        if not donating:
+            return
+        for fn in astutil.index_functions(tree).values():
+            yield from self._check_scope(fn, donating, src_lines, path)
+
+    def _check_scope(self, scope: ast.FunctionDef,
+                     donating: Dict[str, Tuple[int, ...]],
+                     src_lines: List[str], path: str) -> Iterable[Finding]:
+        # dispatch sites in this scope: (line, donated var name, callee)
+        dispatches: List[Tuple[int, str, str]] = []
+        for node in ast.walk(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = astutil.call_target(node)
+            if callee is None:
+                continue
+            key = callee if callee in donating else callee.split(".")[-1]
+            if key not in donating:
+                continue
+            end = getattr(node, "end_lineno", node.lineno) or node.lineno
+            for pos in donating[key]:
+                if pos < len(node.args) and \
+                        isinstance(node.args[pos], (ast.Name, ast.Attribute)):
+                    nm = astutil.dotted(node.args[pos])
+                    if nm:
+                        dispatches.append((end, nm, callee))
+
+        for line, name, callee in dispatches:
+            # earliest rebind of `name` ending at/after the dispatch; the
+            # canonical `state = step(state)` rebinds in the dispatch
+            # statement itself, which is the sanctioned pattern.
+            rebind: Optional[int] = None
+            for node in ast.walk(scope):
+                end = getattr(node, "end_lineno", None) or \
+                    getattr(node, "lineno", None)
+                if end is None or end < line:
+                    continue
+                if name in _stored_names(node) and \
+                        (rebind is None or end < rebind):
+                    rebind = end
+            # first Load of `name` strictly after the dispatch's last
+            # line (loads inside the call are the donation itself) and
+            # not past the rebind
+            worst: Optional[ast.AST] = None
+            for node in ast.walk(scope):
+                lineno = getattr(node, "lineno", None)
+                if lineno is None or lineno <= line:
+                    continue
+                if rebind is not None and lineno > rebind:
+                    continue
+                hit = (isinstance(node, ast.Name)
+                       and isinstance(node.ctx, ast.Load)
+                       and node.id == name) or \
+                      (isinstance(node, ast.Attribute)
+                       and isinstance(node.ctx, ast.Load)
+                       and astutil.dotted(node) == name)
+                if hit and (worst is None or lineno < worst.lineno):
+                    worst = node
+            if worst is not None:
+                yield self.finding(
+                    path, src_lines, worst,
+                    f"`{name}` was donated to `{callee}` on line {line} "
+                    "(donate_argnums) and is read here without a rebind — "
+                    "the buffer may already be invalidated")
+
+
+# ---------------------------------------------------------------------------
+# R3
+# ---------------------------------------------------------------------------
+
+_DRAWS = {
+    "normal", "uniform", "bernoulli", "randint", "permutation", "choice",
+    "categorical", "gumbel", "truncated_normal", "bits", "beta", "gamma",
+    "exponential", "poisson", "shuffle", "laplace",
+}
+_REFRESH = {"split", "fold_in", "clone", "wrap_key_data"}
+
+
+def _random_call(node: ast.Call) -> Optional[str]:
+    """'split' / 'normal' / ... when node is a jax.random.<x>(...) call."""
+    tgt = astutil.call_target(node)
+    if tgt is None:
+        return None
+    parts = tgt.split(".")
+    if len(parts) >= 2 and parts[-2] == "random":
+        return parts[-1]
+    if len(parts) == 2 and parts[0] in ("jrandom", "jr"):
+        return parts[-1]
+    return None
+
+
+def _is_test_path(path: str) -> bool:
+    base = posixpath.basename(path)
+    if base.startswith("test_") or base == "conftest.py":
+        return True
+    parts = path.replace("\\", "/").split("/")
+    return "configs" in parts
+
+
+class PRNGDisciplineRule(Rule):
+    id = "R3"
+    name = "prng-reuse"
+    doc = ("a PRNG key must not feed two jax.random draws without an "
+           "intervening split/fold_in; no literal PRNGKey(<int>) outside "
+           "tests/configs")
+
+    def check(self, tree: ast.Module, src_lines: List[str], path: str
+              ) -> Iterable[Finding]:
+        for fn in astutil.index_functions(tree).values():
+            yield from self._check_reuse(fn, src_lines, path)
+        if not _is_test_path(path):
+            yield from self._check_literal_keys(tree, src_lines, path)
+
+    def _check_literal_keys(self, tree: ast.Module, src_lines: List[str],
+                            path: str) -> Iterable[Finding]:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            tgt = astutil.call_target(node)
+            if tgt is None:
+                continue
+            is_key_ctor = tgt.split(".")[-1] == "PRNGKey" or \
+                tgt.endswith("random.key")
+            if not is_key_ctor:
+                continue
+            if node.args and astutil.int_const(node.args[0]) is not None:
+                yield self.finding(
+                    path, src_lines, node,
+                    f"literal `{tgt}({astutil.int_const(node.args[0])})` "
+                    "outside tests/configs — thread the seed from "
+                    "config/CLI so runs are reproducible and distinct")
+
+    @staticmethod
+    def _header_exprs(stmt: ast.stmt) -> List[ast.AST]:
+        """Expressions a compound statement evaluates before its body —
+        so the body is scanned once (by recursion), not twice."""
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            return [stmt.iter]
+        if isinstance(stmt, (ast.While, ast.If)):
+            return [stmt.test]
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            return [item.context_expr for item in stmt.items]
+        if isinstance(stmt, ast.Try):
+            return []
+        return [stmt]  # simple statement: walk the whole thing
+
+    def _check_reuse(self, fn: ast.FunctionDef, src_lines: List[str],
+                     path: str) -> Iterable[Finding]:
+        # sequential scan of the statement list (no branch merging —
+        # lint-grade): key name -> line of the draw that consumed it
+        consumed: Dict[str, int] = {}
+
+        def walk_headers(stmt: ast.stmt):
+            for expr in self._header_exprs(stmt):
+                yield from ast.walk(expr)
+
+        def scan(stmts: List[ast.stmt]):
+            for stmt in stmts:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                    continue
+                hits = []
+                for node in walk_headers(stmt):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    op = _random_call(node)
+                    if op is None:
+                        continue
+                    key_arg = node.args[0] if node.args else None
+                    key_name = astutil.dotted(key_arg) \
+                        if key_arg is not None else None
+                    if key_name is None:
+                        continue
+                    if op in _REFRESH:
+                        consumed.pop(key_name, None)
+                    elif op in _DRAWS:
+                        if key_name in consumed:
+                            hits.append((node, key_name, consumed[key_name]))
+                        consumed[key_name] = node.lineno
+                for node, key_name, prev in hits:
+                    yield self.finding(
+                        path, src_lines, node,
+                        f"key `{key_name}` already consumed by a "
+                        f"jax.random draw on line {prev} — split/fold_in "
+                        "before drawing again")
+                # any rebind of the name refreshes it
+                for name in astutil.assign_target_names(stmt):
+                    consumed.pop(name, None)
+                # recurse into compound statements, same consumed map
+                for attr in ("body", "orelse", "finalbody"):
+                    inner = getattr(stmt, attr, None)
+                    if inner:
+                        yield from scan(inner)
+                for handler in getattr(stmt, "handlers", []) or []:
+                    yield from scan(handler.body)
+
+        yield from scan(fn.body)

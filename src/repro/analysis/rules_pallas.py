@@ -1,0 +1,168 @@
+"""R6 — Pallas kernel rules.
+
+Two hazards this repo has actually hit while growing the kernel layer:
+
+* ``input_output_aliases`` indices that don't line up with the operand
+  list. Pallas resolves aliases positionally against the *call-site*
+  operands (scalar-prefetch args included), so an off-by-one silently
+  aliases the wrong buffer — the kernel "works" in interpret mode and
+  corrupts the pool on device. The rule checks every literal alias dict
+  against the arity of the immediate ``pl.pallas_call(...)(ops...)``
+  invocation and, when ``out_shape`` is a literal list/tuple, that alias
+  values reference real outputs.
+
+* kernel bodies defined *inside* a traced function that close over the
+  enclosing tracers. Refs come in through the kernel's parameters;
+  closed-over tracers get baked in as constants at best and leak at
+  worst. Module-level kernels (this repo's idiom) are immune; static
+  Python config bound via ``functools.partial`` is fine.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis import astutil
+from repro.analysis.astutil import Rule
+from repro.analysis.findings import Finding
+
+_PALLAS_CALLS = ("pl.pallas_call", "pallas_call",
+                 "jax.experimental.pallas.pallas_call")
+
+
+def _is_pallas_call(node: ast.AST) -> bool:
+    return isinstance(node, ast.Call) and \
+        astutil.is_entry_call(astutil.call_target(node), _PALLAS_CALLS)
+
+
+def _alias_dict(call: ast.Call) -> Optional[Dict[int, int]]:
+    """Literal {int: int} value of input_output_aliases, else None."""
+    for kw in call.keywords:
+        if kw.arg != "input_output_aliases":
+            continue
+        if not isinstance(kw.value, ast.Dict):
+            return None
+        out: Dict[int, int] = {}
+        for k, v in zip(kw.value.keys, kw.value.values):
+            ki = astutil.int_const(k) if k is not None else None
+            vi = astutil.int_const(v)
+            if ki is None or vi is None:
+                return None
+            out[ki] = vi
+        return out
+    return None
+
+
+def _out_count(call: ast.Call) -> Optional[int]:
+    """Number of outputs when out_shape is a literal list/tuple."""
+    for kw in call.keywords:
+        if kw.arg == "out_shape":
+            if isinstance(kw.value, (ast.List, ast.Tuple)):
+                return len(kw.value.elts)
+            return None
+    return None
+
+
+class PallasKernelRule(Rule):
+    id = "R6"
+    name = "pallas-alias"
+    doc = ("input_output_aliases must index real operands/outputs; kernel "
+           "bodies must not close over enclosing tracers")
+
+    def check(self, tree: ast.Module, src_lines: List[str], path: str
+              ) -> Iterable[Finding]:
+        yield from self._check_aliases(tree, src_lines, path)
+        yield from self._check_closures(tree, src_lines, path)
+
+    # -- alias index validity ------------------------------------------------
+    def _check_aliases(self, tree: ast.Module, src_lines: List[str],
+                      path: str) -> Iterable[Finding]:
+        # named pallas programs: `prog = pl.pallas_call(...)` -> alias dict,
+        # so a later `prog(a, b)` in the same module can be arity-checked.
+        named: Dict[str, Tuple[ast.Call, Dict[int, int]]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and _is_pallas_call(node.value):
+                aliases = _alias_dict(node.value)
+                if aliases:
+                    for t in node.targets:
+                        nm = astutil.dotted(t)
+                        if nm:
+                            named[nm] = (node.value, aliases)
+
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            pallas_call: Optional[ast.Call] = None
+            aliases: Optional[Dict[int, int]] = None
+            if _is_pallas_call(node.func):
+                pallas_call = node.func  # pl.pallas_call(...)(ops...)
+                aliases = _alias_dict(pallas_call)
+            else:
+                nm = astutil.dotted(node.func)
+                if nm in named:
+                    pallas_call, aliases = named[nm]
+            if pallas_call is None or not aliases:
+                continue
+            n_ops = len(node.args)
+            if any(isinstance(a, ast.Starred) for a in node.args):
+                continue  # arity unknowable
+            n_out = _out_count(pallas_call)
+            for k, v in sorted(aliases.items()):
+                if not 0 <= k < n_ops:
+                    yield self.finding(
+                        path, src_lines, pallas_call,
+                        f"input_output_aliases key {k} does not name a "
+                        f"real operand — the call passes {n_ops} operands "
+                        f"(valid indices 0..{n_ops - 1})")
+                if n_out is not None and not 0 <= v < n_out:
+                    yield self.finding(
+                        path, src_lines, pallas_call,
+                        f"input_output_aliases value {v} does not name a "
+                        f"real output — out_shape has {n_out} entries")
+
+    # -- closed-over tracers -------------------------------------------------
+    def _check_closures(self, tree: ast.Module, src_lines: List[str],
+                        path: str) -> Iterable[Finding]:
+        # kernels: first argument of any pallas_call, resolved through
+        # functools.partial to a bare name
+        kernel_names: Set[str] = set()
+        for node in ast.walk(tree):
+            if _is_pallas_call(node) and node.args:
+                nm = astutil._resolve_fn_arg(node.args[0])
+                if nm:
+                    kernel_names.add(nm)
+        if not kernel_names:
+            return
+
+        # enclosing traced functions (decorator or jit/shard_map by name)
+        fns = astutil.index_functions(tree)
+        traced = set(astutil.traced_function_names(
+            tree, astutil.TRACE_ENTRY_CALLS))
+        traced |= {name for name, fn in fns.items()
+                   if astutil.decorator_traces(fn)}
+
+        for name in traced:
+            outer = fns.get(name)
+            if outer is None:
+                continue
+            tracer_params = set(astutil.param_names(outer)) \
+                - astutil.static_param_names(outer)
+            for node in ast.walk(outer):
+                if not isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                if node is outer or node.name not in kernel_names:
+                    continue
+                own = set(astutil.param_names(node))
+                for sub in ast.walk(node):
+                    own |= astutil.assign_target_names(sub) \
+                        if isinstance(sub, ast.stmt) else set()
+                closed = sorted(
+                    n for n in astutil.names_loaded(node) - own
+                    if n in tracer_params)
+                if closed:
+                    yield self.finding(
+                        path, src_lines, node,
+                        f"kernel `{node.name}` closes over traced "
+                        f"value(s) {closed} from enclosing `{outer.name}` "
+                        "— pass them as operands so they arrive as Refs")

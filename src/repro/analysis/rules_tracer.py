@@ -1,0 +1,120 @@
+"""R1 — tracer-unsafe Python inside traced functions.
+
+A function handed to ``jax.jit`` / ``shard_map`` / ``pl.pallas_call``
+(by decorator or by name) receives tracers, not values: Python ``if`` /
+``while`` on a traced value concretizes the tracer (TracerBoolConversion
+at best, silently-baked constants under ``static_argnums`` confusion at
+worst), and ``bool()`` / ``int()`` / ``float()`` / ``np.*`` calls force a
+host round-trip that breaks the one-dispatch-per-round discipline.
+
+Taint model (deliberately first-order): the traced function's own
+parameters are tainted; plain assignments propagate; ``.shape`` /
+``.ndim`` / ``.dtype`` reads are trace-time-static and strip taint, and
+``x is None`` / ``x is not None`` tests are exempt (static Python
+structure, the repo's optional-argument idiom). Same-module functions
+reachable from a traced function by bare-name calls are analyzed too
+(their params are assumed traced), because this repo factors round
+bodies that way (``core/engine.round_body``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set
+
+from repro.analysis import astutil
+from repro.analysis.astutil import Rule
+from repro.analysis.findings import Finding
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "sharding"}
+_CONCRETIZERS = {"bool", "int", "float"}
+
+
+def _strip_static(node: ast.AST, tainted: Set[str]) -> Set[str]:
+    """Tainted names loaded by ``node``, ignoring loads that only feed
+    trace-time-static attribute reads (``x.shape[0]``) and ``is None``
+    comparisons."""
+    hits: Set[str] = set()
+
+    class V(ast.NodeVisitor):
+        def visit_Attribute(self, a: ast.Attribute):
+            if a.attr in _STATIC_ATTRS:
+                return  # x.shape is static at trace time — taint stops
+            self.generic_visit(a)
+
+        def visit_Compare(self, c: ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in c.ops) and \
+                    any(isinstance(x, ast.Constant) and x.value is None
+                        for x in [c.left] + c.comparators):
+                return  # `x is None` — static structure test
+            self.generic_visit(c)
+
+        def visit_Name(self, n: ast.Name):
+            if isinstance(n.ctx, ast.Load) and n.id in tainted:
+                hits.add(n.id)
+
+    V().visit(node)
+    return hits
+
+
+class TracerBranchRule(Rule):
+    id = "R1"
+    name = "tracer-branch"
+    doc = ("no Python `if`/`while`/`bool()`/`int()`/`float()`/`np.*` on "
+           "values flowing from jit/shard_map/pallas_call parameters")
+
+    def check(self, tree: ast.Module, src_lines: List[str], path: str
+              ) -> Iterable[Finding]:
+        fns = astutil.index_functions(tree)
+        roots = set(astutil.traced_function_names(
+            tree, astutil.TRACE_ENTRY_CALLS))
+        roots |= {name for name, fn in fns.items()
+                  if astutil.decorator_traces(fn)}
+        for name in sorted(astutil.local_call_closure(roots, fns)):
+            yield from self._check_fn(fns[name], src_lines, path)
+
+    def _check_fn(self, fn: ast.FunctionDef, src_lines: List[str],
+                  path: str) -> Iterable[Finding]:
+        tainted: Set[str] = set(astutil.param_names(fn)) \
+            - astutil.static_param_names(fn)
+        # forward taint propagation through simple assignments, in source
+        # order (one pass: lint-grade, not a fixpoint)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn:
+                continue
+            if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                value = node.value
+                if value is not None and _strip_static(value, tainted):
+                    tainted |= astutil.assign_target_names(node)
+
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                hits = _strip_static(node.test, tainted)
+                if hits:
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield self.finding(
+                        path, src_lines, node,
+                        f"Python `{kind}` on traced value(s) "
+                        f"{sorted(hits)} inside traced function "
+                        f"`{fn.name}` — use jnp.where/lax.cond")
+            elif isinstance(node, ast.Call):
+                tgt = astutil.call_target(node)
+                if tgt in _CONCRETIZERS and node.args:
+                    hits = _strip_static(node.args[0], tainted)
+                    if hits:
+                        yield self.finding(
+                            path, src_lines, node,
+                            f"`{tgt}()` concretizes traced value(s) "
+                            f"{sorted(hits)} inside traced function "
+                            f"`{fn.name}`")
+                elif tgt and (tgt.startswith("np.")
+                              or tgt.startswith("numpy.")):
+                    hits: Set[str] = set()
+                    for a in node.args:
+                        hits |= _strip_static(a, tainted)
+                    if hits:
+                        yield self.finding(
+                            path, src_lines, node,
+                            f"`{tgt}` materializes traced value(s) "
+                            f"{sorted(hits)} on host inside traced "
+                            f"function `{fn.name}` — use jnp")

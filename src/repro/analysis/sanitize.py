@@ -1,0 +1,160 @@
+"""Runtime sanitizer lane (DESIGN.md §14): the dynamic half of repro-lint.
+
+``Sanitizer`` is a context manager that arms, for the duration of a run:
+
+  * ``jax_debug_nans`` — any dispatch producing NaN raises
+    FloatingPointError at the offending primitive instead of poisoning
+    the round silently;
+  * ``jax_check_tracer_leaks`` (opt-in via ``tracer_leaks=True``) — a
+    tracer escaping its trace (the R1 hazard class, caught dynamically)
+    raises instead of mis-baking. OFF by default: leak checking keeps
+    debug refs that defeat jax's dispatch cache (measured: a repeat
+    call with freshly-built inputs recompiles every program), so it
+    cannot coexist with the steady-state assertion — use it as a
+    separate debugging lane, never under ``assert_steady_state``;
+  * a compile counter — every actual XLA backend compile (cache hits
+    excluded) observed via ``jax.monitoring`` is counted, so a driver
+    can prove the steady-state claim the whole performance story rests
+    on: after warmup, NOTHING recompiles per round/tick
+    (``mark_steady()`` then ``assert_steady_state()``).
+
+The flags are part of jit's cache key, so flipping them mid-run forces
+recompiles — which is why the drivers run their warmup INSIDE the
+context (enter, warm up, mark steady, measure, assert) rather than
+warming up first and sanitizing after.
+
+Pure opt-in: nothing here runs unless a driver is handed ``sanitize=``.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import List, Optional, Union
+
+import jax
+
+#: the monitoring event jax records once per actual backend compile
+COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_ACTIVE: List["Sanitizer"] = []
+_listener_installed = False
+
+
+def _on_event_duration(event: str, duration: float, **kwargs) -> None:
+    if event == COMPILE_EVENT:
+        for s in _ACTIVE:
+            s.compiles += 1
+
+
+def _install_listener() -> None:
+    # jax.monitoring has no unregister API, so install one module-level
+    # listener forever and gate it on the active-sanitizer list (empty
+    # list -> the callback is a no-op per event).
+    global _listener_installed
+    if not _listener_installed:
+        jax.monitoring.register_event_duration_secs_listener(
+            _on_event_duration)
+        _listener_installed = True
+
+
+class SteadyStateError(AssertionError):
+    """Compiles happened after ``mark_steady()`` — the steady-state
+    contract (one-time warmup compile, zero per-round/tick recompiles)
+    is broken."""
+
+
+class Sanitizer:
+    """Arms NaN/tracer-leak checking and counts backend compiles.
+
+    Usage (what the drivers do under ``sanitize=``)::
+
+        san = Sanitizer(label="serve")
+        with san:
+            warmup_run()          # compiles happen here, counted
+            san.mark_steady()
+            measured_run()        # must compile NOTHING
+            san.assert_steady_state()
+    """
+
+    def __init__(self, *, nan_checks: bool = True,
+                 tracer_leaks: bool = False, label: str = "run"):
+        if tracer_leaks:
+            import warnings
+
+            warnings.warn(
+                "tracer_leaks=True defeats jax's dispatch cache — every "
+                "fresh-input call recompiles, so assert_steady_state() "
+                "will (correctly) fail; use this lane for leak hunting "
+                "only", stacklevel=2)
+        self.nan_checks = nan_checks
+        self.tracer_leaks = tracer_leaks
+        self.label = label
+        self.compiles = 0  # total backend compiles while active
+        self._steady_at: Optional[int] = None
+        self._saved = None
+
+    # -- classification ------------------------------------------------------
+    @property
+    def active(self) -> bool:
+        return self._saved is not None
+
+    @property
+    def steady_compiles(self) -> int:
+        """Compiles observed since ``mark_steady()`` (0 before marking)."""
+        if self._steady_at is None:
+            return 0
+        return self.compiles - self._steady_at
+
+    # -- context -------------------------------------------------------------
+    def __enter__(self) -> "Sanitizer":
+        if self.active:
+            raise RuntimeError(f"Sanitizer({self.label!r}) is not reentrant")
+        _install_listener()
+        self._saved = (jax.config.jax_debug_nans,
+                       jax.config.jax_check_tracer_leaks)
+        if self.nan_checks:
+            jax.config.update("jax_debug_nans", True)
+        if self.tracer_leaks:
+            jax.config.update("jax_check_tracer_leaks", True)
+        self.compiles = 0
+        self._steady_at = None
+        _ACTIVE.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _ACTIVE.remove(self)
+        debug_nans, tracer_leaks = self._saved
+        jax.config.update("jax_debug_nans", debug_nans)
+        jax.config.update("jax_check_tracer_leaks", tracer_leaks)
+        self._saved = None
+
+    # -- steady-state contract ----------------------------------------------
+    def mark_steady(self) -> None:
+        """Warmup is over: from here on, a compile is a bug."""
+        self._steady_at = self.compiles
+
+    def assert_steady_state(self) -> None:
+        if self._steady_at is None:
+            raise SteadyStateError(
+                f"[{self.label}] assert_steady_state() without "
+                "mark_steady(): nothing separates warmup from measurement")
+        if self.steady_compiles:
+            raise SteadyStateError(
+                f"[{self.label}] {self.steady_compiles} backend compile(s) "
+                f"after mark_steady() (total {self.compiles}) — some "
+                "per-round/tick dispatch is not hitting the jit cache "
+                "(shape/dtype drift, python-value capture, or a config "
+                "flag flip changed the cache key)")
+
+
+def coerce(sanitize: Union[bool, Sanitizer, None], *,
+           label: str = "run") -> Optional[Sanitizer]:
+    """Driver-kwarg convenience: True -> fresh Sanitizer, falsy -> None,
+    an instance passes through (shared across drivers if desired)."""
+    if isinstance(sanitize, Sanitizer):
+        return sanitize
+    return Sanitizer(label=label) if sanitize else None
+
+
+def maybe(sanitizer: Optional[Sanitizer]):
+    """``with maybe(s):`` — s or a no-op when sanitizing is off."""
+    return sanitizer if sanitizer is not None else contextlib.nullcontext()

@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize as _sanitize
 from repro.core.engine import RoundEngine, _quiet_donation
 from repro.core.fedveca import RoundStats
 from repro.core.scheduler import AdmissionScheduler
@@ -155,6 +156,7 @@ class BufferedRoundEngine(AdmissionScheduler):
         eval_fn: Optional[Callable] = None,
         eval_every: int = 1,
         on_row: Optional[Callable[[Dict[str, Any]], None]] = None,
+        sanitize=None,
     ):
         super().__init__()
         if engine.controller is None:
@@ -189,6 +191,10 @@ class BufferedRoundEngine(AdmissionScheduler):
         self.eval_fn = eval_fn
         self.eval_every = eval_every
         self.on_row = on_row
+        # analysis lane (DESIGN.md §14): NaN checks + the steady-state
+        # proof — commit 0 warms every program (wave, folds, step, eval);
+        # later commits must recompile nothing.
+        self.sanitizer = _sanitize.coerce(sanitize, label="buffered-rounds")
         self._step_jit = self._make_step()
         self._fold_jit = jax.jit(self._make_fold(), donate_argnums=(0,))
         self.host_blocked_s = 0.0
@@ -445,22 +451,32 @@ class BufferedRoundEngine(AdmissionScheduler):
         self.dispatch_s = 0.0
         self.tau_all = 0
 
-        for _ in range(min(self.bcfg.waves, steps)):
-            self._dispatch_wave()
-        while self._version < steps:
-            before = self._version
-            self.tick()
-            if self._version == before:
-                raise RuntimeError(
-                    "buffered scheduler made no progress: buffer cannot "
-                    "fill (no arrivals left?)"
-                )
-        while self._pend:
-            self._finalize(self._pend.popleft())
+        # warmup must run INSIDE the sanitize context (the armed flags
+        # are part of jit's cache key — see analysis/sanitize.py)
+        with _sanitize.maybe(self.sanitizer):
+            for _ in range(min(self.bcfg.waves, steps)):
+                self._dispatch_wave()
+            while self._version < steps:
+                before = self._version
+                self.tick()
+                if self._version == before:
+                    raise RuntimeError(
+                        "buffered scheduler made no progress: buffer cannot "
+                        "fill (no arrivals left?)"
+                    )
+                if self.sanitizer is not None and before == 0:
+                    # commit 0 dispatched every program once: wave update,
+                    # fold, commit step, eval — steady state from here
+                    jax.block_until_ready(self._params)
+                    self.sanitizer.mark_steady()
+            while self._pend:
+                self._finalize(self._pend.popleft())
 
-        t0 = time.perf_counter()
-        jax.block_until_ready(self._params)
-        self.host_blocked_s += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            jax.block_until_ready(self._params)
+            self.host_blocked_s += time.perf_counter() - t0
+            if self.sanitizer is not None and steps > 1:
+                self.sanitizer.assert_steady_state()
         log.params = self._params  # type: ignore[attr-defined]
         log.tau_all = self.tau_all  # type: ignore[attr-defined]
         log.close()

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize as _sanitize
 from repro.core.engine import RoundEngine
 from repro.data.device import format_batch
 from repro.metrics.logger import RunLogger
@@ -115,6 +116,7 @@ class TrainDriver:
         eval_every: int = 1,
         batches_fn: Optional[Callable] = None,
         on_row: Optional[Callable[[Dict[str, Any]], None]] = None,
+        sanitize=None,
     ):
         if engine.controller is None:
             raise ValueError("TrainDriver needs an engine built with "
@@ -130,6 +132,11 @@ class TrainDriver:
         self.eval_every = eval_every
         self.batches_fn = batches_fn
         self.on_row = on_row
+        # sanitize=True / Sanitizer instance: run under the analysis
+        # lane — NaN checks armed, and the run must prove zero
+        # steady-state recompiles (round 0 is the warmup; every later
+        # round must hit the jit cache). DESIGN.md §14.
+        self.sanitizer = _sanitize.coerce(sanitize, label="train-driver")
         self.host_blocked_s = 0.0  # device->host readback waits
         self.dispatch_s = 0.0  # time inside the dispatch calls themselves:
         #   ~0 under true async dispatch (TPU); on the CPU backend the call
@@ -153,28 +160,40 @@ class TrainDriver:
         self.dispatch_s = 0.0
         self.tau_all = 0
 
-        for k in range(rounds):
-            cohort = engine.sample_cohort(rng)
-            key, sub = jax.random.split(key)
-            batches = self.batches_fn(rng) if self.batches_fn else None
-            t0 = time.perf_counter()
-            params, cstate, scaffold, diag = engine.run_fused(
-                params, cstate, self.p, key=sub, batches=batches,
-                scaffold=scaffold, cohort=cohort,
-            )
-            self.dispatch_s += time.perf_counter() - t0
-            ev = None
-            if self.eval_fn and ((k % self.eval_every) == 0 or k == rounds - 1):
-                ev = self.eval_fn(params)
-            pending.append((k, cohort, diag, ev))
-            while len(pending) > self.overlap:
+        # Warmup must happen INSIDE the sanitize context: the sanitize
+        # flags are part of jit's cache key, so entering it later would
+        # itself force the recompiles it is meant to rule out.
+        with _sanitize.maybe(self.sanitizer):
+            for k in range(rounds):
+                cohort = engine.sample_cohort(rng)
+                key, sub = jax.random.split(key)
+                batches = self.batches_fn(rng) if self.batches_fn else None
+                t0 = time.perf_counter()
+                params, cstate, scaffold, diag = engine.run_fused(
+                    params, cstate, self.p, key=sub, batches=batches,
+                    scaffold=scaffold, cohort=cohort,
+                )
+                self.dispatch_s += time.perf_counter() - t0
+                ev = None
+                if self.eval_fn and ((k % self.eval_every) == 0
+                                     or k == rounds - 1):
+                    ev = self.eval_fn(params)
+                pending.append((k, cohort, diag, ev))
+                while len(pending) > self.overlap:
+                    self._finalize(pending.popleft(), log)
+                if self.sanitizer is not None and k == 0:
+                    # round 0 dispatched everything once (round + eval):
+                    # from here on every round must hit the jit cache
+                    jax.block_until_ready(params)
+                    self.sanitizer.mark_steady()
+            while pending:
                 self._finalize(pending.popleft(), log)
-        while pending:
-            self._finalize(pending.popleft(), log)
 
-        t0 = time.perf_counter()
-        jax.block_until_ready(params)
-        self.host_blocked_s += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            jax.block_until_ready(params)
+            self.host_blocked_s += time.perf_counter() - t0
+            if self.sanitizer is not None and rounds > 1:
+                self.sanitizer.assert_steady_state()
         log.params = params  # type: ignore[attr-defined]
         log.tau_all = self.tau_all  # type: ignore[attr-defined]
         log.close()

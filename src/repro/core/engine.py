@@ -49,7 +49,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.controller import ControllerCore
 from repro.core.fedveca import ScaffoldState, make_local_update, make_round_step
-from repro.core.strategy import get_strategy, make_reduce
+from repro.core.strategy import get_strategy, global_sum, make_reduce
 from repro.core.tree import tree_axpy, tree_zeros_like
 from repro.data.device import DeviceShards
 
@@ -201,9 +201,10 @@ class RoundEngine:
                                                           self._local_C - 1)],
                                      jnp.float32(0.0))
                 tau = tau[local]
-                norm = jnp.sum(pw_l)  # partial participation: renormalize
-                if offset is not None:
-                    norm = jax.lax.psum(norm, self._client_axes)
+                # partial participation: renormalize cohort weights (psum
+                # routes through the strategy layer when sharded)
+                norm = global_sum(
+                    pw_l, self._client_axes if offset is not None else None)
                 pw = pw_l / norm
                 if scaffold is not None:
                     # c_i rows are per CLIENT ID, not cohort position

@@ -90,6 +90,13 @@ def main():
                     choices=("instant", "uniform", "exp", "hetero"),
                     help="simulated client latency model under --buffered")
     ap.add_argument("--latency-scale", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="root seed: init, per-client data topics, round "
+                         "subkeys all derive from it")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run under the analysis sanitizer lane "
+                         "(DESIGN.md §14): NaN checks armed and the run "
+                         "must prove zero steady-state recompiles")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -121,7 +128,8 @@ def main():
           f"cohort={args.cohort or C} overlap={args.overlap}")
 
     datasets = [
-        make_lm_tokens(64, args.seq, cfg.vocab_size, topic=i, seed=0) for i in range(C)
+        make_lm_tokens(64, args.seq, cfg.vocab_size, topic=i, seed=args.seed)
+        for i in range(C)
     ]
     # Inside the federated round the mesh data axes are consumed by the
     # CLIENT dimension; per-client activation batches should NOT claim them.
@@ -145,7 +153,7 @@ def main():
         mesh=fed_mesh,
     )
 
-    params = model.init(jax.random.PRNGKey(0))
+    params = model.init(jax.random.PRNGKey(args.seed))
     taus = np.full(C, 2, np.int32)
     p = np.full((C,), 1.0 / C, np.float32)
     t_last = [time.time()]
@@ -171,9 +179,9 @@ def main():
             BufferedConfig(
                 waves=args.buffer_waves, grad_decay=args.grad_decay,
                 latency=LatencyModel(args.latency, scale=args.latency_scale),
-                seed=0, overlap=max(args.overlap, 1),
+                seed=args.seed, overlap=max(args.overlap, 1),
             ),
-            mode=args.mode, on_row=on_row,
+            mode=args.mode, on_row=on_row, sanitize=args.sanitize,
         )
         with mesh:
             buffered.run(params, args.rounds, taus)
@@ -184,7 +192,8 @@ def main():
         return
 
     driver = TrainDriver(
-        engine, p, overlap=args.overlap, seed=0, mode=args.mode,
+        engine, p, overlap=args.overlap, seed=args.seed, mode=args.mode,
+        sanitize=args.sanitize,
         batches_fn=(
             (lambda rng: host_stacked_batches(datasets, rng, args.tau_max,
                                               args.batch_per_client))

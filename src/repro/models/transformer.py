@@ -6,6 +6,7 @@ rematerialization) — HLO size and compile time are depth-independent.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Dict, NamedTuple, Optional
 
 import jax
@@ -403,6 +404,37 @@ def paged_decode_step(cfg, p, cache: PagedDecodeCache, page_table, token, pos,
     return logits, PagedDecodeCache(kv=kv, ssm=ssm_st)
 
 
+class KernelExtendFallbackWarning(UserWarning):
+    """Chunk prefill lowered ``cache_update="kernel"`` to the mask path.
+
+    The Pallas prefill-insert kernel has no chunk/suffix variant yet —
+    a ``cache_update="kernel"`` extend path is the open §12.2 follow-up
+    (ROADMAP.md, serving-scheduler item). Decode still dispatches the
+    Pallas kernel; only the chunk WRITES take the one-hot mask path,
+    which is bit-identical (tests/test_serve_sched.py pins parity).
+    """
+
+
+_KERNEL_EXTEND_WARNED = False
+
+
+def warn_kernel_extend_fallback(site: str) -> None:
+    """One-time (per process) structured warning for the kernel->mask
+    chunk-prefill lowering; every lowering site routes through here so
+    the notice fires once no matter which plane hits it first."""
+    global _KERNEL_EXTEND_WARNED
+    if _KERNEL_EXTEND_WARNED:
+        return
+    _KERNEL_EXTEND_WARNED = True
+    warnings.warn(
+        KernelExtendFallbackWarning(
+            f"{site}: cache_update='kernel' has no chunk-prefill variant "
+            "yet — chunk writes lowered to the bit-identical 'mask' path "
+            "(decode keeps the Pallas kernel). Tracked as the §12.2 "
+            "follow-up: a cache_update='kernel' extend path (ROADMAP.md)."),
+        stacklevel=3)
+
+
 def paged_prefill_chunk(cfg, p, cache: PagedDecodeCache, page_row, tokens,
                         start, length, unroll=1, cache_update: str = "mask"):
     """Prefill one chunk of a single request's prompt DIRECTLY into the
@@ -439,6 +471,8 @@ def paged_prefill_chunk(cfg, p, cache: PagedDecodeCache, page_row, tokens,
         h = h + p["pos_embed"][positions][None].astype(h.dtype)
     # pad rows must not compete for MoE expert capacity
     live = (jnp.arange(C, dtype=jnp.int32) < length)[None, :]  # [1, C]
+    if cache_update == "kernel":
+        warn_kernel_extend_fallback("models.transformer.paged_prefill_chunk")
     cu = "mask" if cache_update == "kernel" else cache_update
 
     def body(carry, xs_):

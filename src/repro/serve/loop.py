@@ -43,6 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize as _sanitize
+
 # CPU backends that predate donation support ignore the hint; scoped filter
 # so the warning doesn't fire once per serve dispatch
 from repro.core.engine import _quiet_donation
@@ -50,7 +52,8 @@ from repro.core.scheduler import AdmissionScheduler
 from repro.models.attention import KVCache
 from repro.models.model import Model, decode_capability
 from repro.models.transformer import (DecodeCache, insert_cache_pages,
-                                      insert_cache_slot)
+                                      insert_cache_slot,
+                                      warn_kernel_extend_fallback)
 from repro.serve.sampling import GREEDY, SamplerConfig, make_sample_fn
 from repro.serve.slots import (PageAllocator, PrefixCache, Request,
                                RequestQueue, SlotTable)
@@ -136,12 +139,18 @@ class ServeLoop(AdmissionScheduler):
     def __init__(self, model: Model, params, *, n_slots: int = 8,
                  capacity: int = 256, bucket: int = 16,
                  cache_update: str = "mask", unroll: int = 1,
-                 sampler: Optional[SamplerConfig] = None):
+                 sampler: Optional[SamplerConfig] = None,
+                 sanitize=None):
         _check_servable(model)
         cfg = model.config
         self.model, self.params, self.cfg = model, params, cfg
         self.n_slots, self.capacity, self.bucket = n_slots, capacity, bucket
         self.cache_update = cache_update
+        # analysis lane (DESIGN.md §14): a sanitized run() first drains
+        # the trace on cloned requests (warmup — every prefill bucket and
+        # program compiles there), then replays it measured: NaN checks
+        # armed, per-tick pool audits (paged), and ZERO recompiles.
+        self.sanitizer = _sanitize.coerce(sanitize, label="serve-loop")
         self.sampler = sampler or GREEDY
         self._sample = make_sample_fn(self.sampler)
         # exact-length prefill families: recurrent state absorbs padded
@@ -333,7 +342,23 @@ class ServeLoop(AdmissionScheduler):
 
         Starts from a fresh slot table / tick clock (reset()), so stats
         and arrival ticks are per-trace; compiled programs are reused.
+
+        Under ``sanitize=`` the trace runs twice: once on cloned
+        requests (warmup — every program and prefill bucket compiles),
+        then measured with NaN checks armed and the steady-state
+        assertion: the replay must compile NOTHING. Stats and request
+        outputs come from the measured pass.
         """
+        if self.sanitizer is not None and not self.sanitizer.active:
+            with self.sanitizer:
+                self._drain_trace([r.clone() for r in requests])
+                self.sanitizer.mark_steady()
+                stats = self._drain_trace(requests)
+                self.sanitizer.assert_steady_state()
+            return stats
+        return self._drain_trace(requests)
+
+    def _drain_trace(self, requests: Sequence[Request]) -> Dict:
         self.reset()
         self._queue = RequestQueue(requests)
         t0 = time.time()
@@ -448,7 +473,8 @@ class PagedServeLoop(ServeLoop):
                  sampler: Optional[SamplerConfig] = None,
                  prefix_cache: bool = False,
                  prefill_chunk: Optional[int] = None,
-                 preempt: bool = False, preempt_after: int = 2):
+                 preempt: bool = False, preempt_after: int = 2,
+                 sanitize=None):
         _check_servable(model)
         cfg = model.config
         if cfg.family == "ssm" or model.init_paged_cache is None:
@@ -489,7 +515,7 @@ class PagedServeLoop(ServeLoop):
                     f"full-attention text-only — {why}")
         super().__init__(model, params, n_slots=n_slots, capacity=capacity,
                          bucket=bucket, cache_update=cache_update,
-                         unroll=unroll, sampler=sampler)
+                         unroll=unroll, sampler=sampler, sanitize=sanitize)
 
     def _build_programs(self, model, unroll):
         sample, cache_update = self._sample, self.cache_update
@@ -509,6 +535,8 @@ class PagedServeLoop(ServeLoop):
             # chunk writes reuse the mask path under "kernel" (decode still
             # dispatches the Pallas kernel); start/length are traced scalars
             # so there is ONE compile per chunk width, not per (start, len)
+            if cache_update == "kernel":
+                warn_kernel_extend_fallback("serve.PagedServeLoop")
             cu = "mask" if cache_update == "kernel" else cache_update
             unroll_ = unroll
 
@@ -553,6 +581,10 @@ class PagedServeLoop(ServeLoop):
     def tick(self, queue: Optional[RequestQueue] = None):
         self._chunk_left = self.prefill_chunk  # per-tick chunk token budget
         super().tick(queue)
+        if self.sanitizer is not None and self.sanitizer.active:
+            # sanitize lane: full refcount-conservation audit every tick —
+            # a leaked/double-freed page fails AT the tick that broke it
+            self.check_invariants()
 
     def _rows_needed(self, req: Request) -> int:
         rows = req.plen + req.max_new - 1

@@ -331,6 +331,9 @@ def make_paged_prefill_bundle(model, mesh: Mesh, shape: ShapeConfig, *,
     logical = W if W else shape.seq_len
     P_slot = -(-logical // page_size)
     N = shape.global_batch * P_slot if n_pages is None else n_pages
+    if cache_update == "kernel":
+        from repro.models.transformer import warn_kernel_extend_fallback
+        warn_kernel_extend_fallback("train.steps.make_paged_prefill_bundle")
     cu = "mask" if cache_update == "kernel" else cache_update
 
     def step(params, cache, page_row, tokens, start, length):

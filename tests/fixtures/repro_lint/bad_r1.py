@@ -1,0 +1,43 @@
+"""R1 fixtures: tracer-unsafe Python inside traced functions.
+
+Never imported — parsed by the linter only.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def branch_on_tracer(x, thresh):
+    if x > thresh:  # BAD: Python `if` on a traced value
+        return x * 2.0
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def loop_and_host(x, n):
+    y = x + 1.0
+    while y.sum() > 0:  # BAD: Python `while` on a traced value
+        y = y - 0.1
+    total = np.sum(y)  # BAD: np.* materializes the tracer on host
+    return total
+
+
+def _round_helper(params, grad):
+    scale = float(grad)  # BAD: float() concretizes inside the trace
+    return params - scale * grad
+
+
+step = jax.jit(_round_helper)
+
+
+@jax.jit
+def shape_branches_are_fine(x):
+    # OK: .shape / .ndim are trace-time static; `is None` is structure
+    if x.shape[0] > 4:
+        x = x[:4]
+    if x is None:
+        return x
+    return x * 2

@@ -1,0 +1,29 @@
+"""R2 fixtures: reading a donated buffer after dispatch."""
+import jax
+import jax.numpy as jnp
+
+
+def _step(state, batch):
+    return state + batch
+
+
+step = jax.jit(_step, donate_argnums=(0,))
+
+
+def read_after_donate(state, batch):
+    out = step(state, batch)
+    stale = state + 1.0  # BAD: `state` was donated to step on the line above
+    return out, stale
+
+
+def read_before_rebind(state, batches):
+    for b in batches:
+        new_state = step(state, b)
+        jax.debug.print("norm {}", state)  # BAD: donated, read pre-rebind
+        state = new_state
+    return state
+
+
+def rebind_is_fine(state, batch):
+    state = step(state, batch)  # OK: canonical rebind-at-dispatch
+    return state + 0.0

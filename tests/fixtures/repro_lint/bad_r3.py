@@ -1,0 +1,41 @@
+"""R3 fixtures: PRNG key reuse + literal seeds outside tests/configs.
+
+(The tests/ *directory* does not exempt these files — the exemption is
+by FILENAME (test_*.py / conftest.py) or a `configs` path component, so
+this fixture corpus still trips R3.)
+"""
+import jax
+import jax.numpy as jnp
+
+
+def correlated_draws(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))  # BAD: key already consumed
+    return a + b
+
+
+def loop_reuse(key, n):
+    total = 0.0
+    for _ in range(n):
+        total += jax.random.normal(key, ())  # BAD (2nd iteration reuse is
+        #   the runtime bug; the scan flags the repeated-consumption shape)
+        total += jax.random.normal(key, ())
+    return total
+
+
+def hardcoded_seed():
+    key = jax.random.PRNGKey(42)  # BAD: literal seed outside tests/configs
+    return jax.random.normal(key, (2,))
+
+
+def split_is_fine(key):
+    key, sub = jax.random.split(key)
+    a = jax.random.normal(sub, (4,))
+    key, sub = jax.random.split(key)
+    return a + jax.random.normal(sub, (4,))
+
+
+def fold_in_is_fine(key, i):
+    a = jax.random.normal(jax.random.fold_in(key, i), (4,))
+    key = jax.random.fold_in(key, 1)
+    return a + jax.random.normal(key, (4,))

@@ -1,0 +1,18 @@
+"""R5 fixtures: device compute at import time."""
+import jax
+import jax.numpy as jnp
+
+_TABLE = jnp.arange(1024)  # BAD: device array built at import
+
+_DEVICES = jax.devices()  # BAD: backend init at import
+
+
+class Config:
+    scale = jnp.float32(2.0)  # BAD: class bodies execute at import too
+
+
+def lazy_is_fine():
+    return jnp.arange(1024)  # OK: runs at call time
+
+
+_FN = lambda: jnp.zeros((4,))  # OK: lambda body is deferred

@@ -1,0 +1,53 @@
+"""R6 fixtures: pallas_call alias misindexing + tracer-closing kernels."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def alias_key_out_of_range(x):
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        input_output_aliases={3: 0},  # BAD: only 1 operand (index 0)
+        interpret=True,
+    )(x)
+
+
+def alias_value_out_of_range(x):
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=[jax.ShapeDtypeStruct(x.shape, x.dtype)],
+        input_output_aliases={0: 2},  # BAD: out_shape has 1 entry
+        interpret=True,
+    )(x)
+
+
+@jax.jit
+def kernel_closes_over_tracer(x, bias):
+    def _kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] + bias  # BAD: `bias` is a tracer of the
+        #   enclosing jit — it must arrive as a Ref operand instead
+
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def static_closure_is_fine(x, block):
+    def _kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * block  # OK: `block` is static
+
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)

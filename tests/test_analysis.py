@@ -1,0 +1,155 @@
+"""repro-lint static analysis lane (DESIGN.md §14): the rule catalog
+against the fixture corpus (exact findings, no false positives on the
+clean decoys), allowlist loading/suppression policy, select/ignore
+filtering, and the `python -m repro.analysis` CLI exit-code contract.
+"""
+import json
+import os
+import subprocess
+import sys
+from collections import Counter
+
+import pytest
+
+from repro.analysis import ALL_RULES, lint_paths, load_allowlist, rule_ids
+from repro.analysis.findings import (
+    AllowEntry,
+    AllowlistError,
+    apply_allowlist,
+    Finding,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(ROOT, "tests", "fixtures", "repro_lint")
+SRC = os.path.join(ROOT, "src")
+ALLOWLIST = os.path.join(SRC, "repro", "analysis", "allowlist.toml")
+EXPECTED = os.path.join(FIXTURES, "expected.json")
+
+
+def _corpus():
+    return lint_paths([FIXTURES])
+
+
+def _key(rule, path, line):
+    return (rule, os.path.basename(path), line)
+
+
+# ---------------------------------------------------------------------------
+# fixture corpus: the catalog's ground truth
+# ---------------------------------------------------------------------------
+
+
+def test_corpus_matches_expected_exactly():
+    """Every finding in expected.json is produced, and NOTHING else is —
+    the clean decoy functions in each fixture pin the no-false-positive
+    side of each rule."""
+    res = _corpus()
+    got = sorted(_key(f.rule, f.path, f.line) for f in res.findings)
+    want = sorted(_key(e["rule"], e["path"], e["line"])
+                  for e in json.load(open(EXPECTED)))
+    assert got == want
+    assert not res.parse_errors
+    assert not res.ok
+
+
+def test_every_rule_fires_at_least_twice():
+    counts = Counter(f.rule for f in _corpus().findings)
+    for rule in ALL_RULES:
+        assert counts[rule.id] >= 2, f"{rule.id} fired {counts[rule.id]}x"
+
+
+def test_findings_carry_context():
+    for f in _corpus().findings:
+        assert f.message and f.snippet and f.line >= 1
+        d = json.loads(json.dumps(f.to_json()))  # round-trips
+        assert d["rule"] == f.rule and d["line"] == f.line
+
+
+def test_select_and_ignore():
+    only_r3 = lint_paths([FIXTURES], select=["R3"])
+    assert {f.rule for f in only_r3.findings} == {"R3"}
+    no_r3 = lint_paths([FIXTURES], ignore=["R3"])
+    assert "R3" not in {f.rule for f in no_r3.findings}
+    assert len(only_r3.findings) + len(no_r3.findings) == \
+        len(_corpus().findings)
+    with pytest.raises(ValueError, match="unknown rule"):
+        lint_paths([FIXTURES], select=["R99"])
+
+
+# ---------------------------------------------------------------------------
+# the tree itself: lint must pass on src/ with the checked-in allowlist
+# ---------------------------------------------------------------------------
+
+
+def test_src_tree_is_clean_under_checked_in_allowlist():
+    """The acceptance bar: `repro-lint src` exits clean, every allowlist
+    entry is justified AND used (no stale suppressions)."""
+    res = lint_paths([SRC], allowlist=ALLOWLIST)
+    assert res.ok, res.to_text()
+    assert not res.parse_errors
+    assert not res.unused_allowlist()
+    assert res.allowlist, "allowlist should not load empty"
+    for entry in res.allowlist:
+        assert entry.reason.strip()
+
+
+# ---------------------------------------------------------------------------
+# allowlist policy
+# ---------------------------------------------------------------------------
+
+
+def _entry(**kw):
+    base = dict(rule="R3", path="*/x.py", contains="", reason="why")
+    base.update(kw)
+    return AllowEntry(**base)
+
+
+def test_allowlist_suppression_and_misses():
+    f = Finding(rule="R3", name="prng", path="src/x.py", line=3, col=0,
+                message="m", snippet="jax.random.PRNGKey(0)")
+    kept, suppressed = apply_allowlist([f], [_entry()])
+    assert not kept and len(suppressed) == 1
+    # wrong rule / non-matching substring must NOT suppress
+    for e in (_entry(rule="R1"), _entry(contains="fold_in")):
+        kept, suppressed = apply_allowlist([f], [e])
+        assert kept and not suppressed
+
+
+def test_allowlist_requires_reason(tmp_path):
+    p = tmp_path / "allow.toml"
+    p.write_text('[[allow]]\nrule = "R3"\npath = "x.py"\n')
+    with pytest.raises(AllowlistError, match="reason"):
+        load_allowlist(str(p))
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes (the same invocations scripts/ci.sh relies on)
+# ---------------------------------------------------------------------------
+
+
+def _cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=ROOT, env=env, capture_output=True, text=True)
+
+
+@pytest.mark.slow
+def test_cli_exit_codes():
+    corpus = os.path.relpath(FIXTURES, ROOT)
+    assert _cli(corpus).returncode == 1              # findings -> 1
+    r = _cli(corpus, "--expect", os.path.relpath(EXPECTED, ROOT))
+    assert r.returncode == 0, r.stdout + r.stderr    # exact match -> 0
+    r = _cli("src", "--allowlist", os.path.relpath(ALLOWLIST, ROOT),
+             "--fail-unused-allowlist")
+    assert r.returncode == 0, r.stdout + r.stderr    # clean tree -> 0
+    assert _cli(corpus, "--select", "R99").returncode == 2  # usage -> 2
+    r = _cli(corpus, "--format", "json")
+    assert r.returncode == 1
+    payload = json.loads(r.stdout)
+    assert payload["findings"] and payload["files"] >= 6
+    r = _cli("--rules")
+    assert r.returncode == 0
+    for rid in rule_ids():
+        assert rid in r.stdout

@@ -1,0 +1,173 @@
+"""Runtime sanitizer lane (DESIGN.md §14): the steady-state contract —
+after warmup NOTHING recompiles per round/tick — proven live for a
+ServeLoop tick loop and a TrainDriver/RoundEngine round loop, a
+seeded-NaN round caught the moment it is dispatched, and the Sanitizer
+context itself (compile counting, mark/assert discipline, flag
+save/restore).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.sanitize import Sanitizer, SteadyStateError, coerce, maybe
+from repro.core.controller import ControllerConfig, ControllerCore
+from repro.core.driver import TrainDriver
+from repro.core.engine import EngineConfig, RoundEngine
+from repro.data.device import DeviceShards
+from repro.data.partition import partition_case3
+from repro.data.synthetic import Dataset, binarize_even_odd, make_classification
+from repro.models.model import build_model_by_name
+from repro.serve import ServeLoop, poisson_trace
+
+C, TAU_MAX = 5, 8
+
+
+# ---------------------------------------------------------------------------
+# the Sanitizer contract itself
+# ---------------------------------------------------------------------------
+
+
+def test_counts_compiles_and_flags_post_steady_recompile():
+    def f(x):
+        return x * 2.0
+
+    with Sanitizer(label="unit") as s:
+        step = jax.jit(f)
+        step(jnp.ones((4,)))  # warmup compile
+        assert s.compiles >= 1
+        s.mark_steady()
+        step(jnp.ones((4,)))  # cache hit
+        assert s.steady_compiles == 0
+        s.assert_steady_state()
+        step(jnp.ones((8,)))  # new shape -> recompile AFTER steady
+        assert s.steady_compiles >= 1
+        with pytest.raises(SteadyStateError, match="after mark_steady"):
+            s.assert_steady_state()
+
+
+def test_assert_without_mark_is_an_error():
+    with Sanitizer(label="unit") as s:
+        with pytest.raises(SteadyStateError, match="mark_steady"):
+            s.assert_steady_state()
+
+
+def test_flags_restored_and_not_reentrant():
+    before = bool(jax.config.jax_debug_nans)
+    san = Sanitizer(label="unit")
+    with san:
+        assert jax.config.jax_debug_nans is True
+        with pytest.raises(RuntimeError, match="not reentrant"):
+            san.__enter__()
+    assert bool(jax.config.jax_debug_nans) is before
+
+
+def test_tracer_leaks_lane_warns():
+    """Leak checking defeats the dispatch cache (measured), so asking for
+    it must loudly disclaim the steady-state assertion."""
+    with pytest.warns(UserWarning, match="dispatch cache"):
+        Sanitizer(label="unit", tracer_leaks=True)
+
+
+def test_coerce_and_maybe():
+    assert coerce(None) is None and coerce(False) is None
+    s = coerce(True, label="x")
+    assert isinstance(s, Sanitizer) and s.label == "x"
+    assert coerce(s) is s  # instances pass through (shared across drivers)
+    with maybe(None):  # no-op context
+        pass
+
+
+# ---------------------------------------------------------------------------
+# RoundEngine round loop under sanitize: zero steady-state recompiles
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def svm_setup():
+    orig = make_classification(600, (784,), 10, seed=0)
+    train = binarize_even_odd(orig)
+    parts = partition_case3(orig.y, C, seed=0)
+    clients = [Dataset(train.x[s], train.y[s]) for s in parts]
+    model = build_model_by_name("svm-mnist")
+    p = np.array([len(c) for c in clients], np.float64)
+    p = (p / p.sum()).astype(np.float32)
+    return model, clients, p
+
+
+def _driver(model, clients, p, sanitize=None):
+    eng = RoundEngine(
+        model.loss,
+        EngineConfig(mode="fedveca", eta=0.05, tau_max=TAU_MAX,
+                     batch_size=16),
+        shards=DeviceShards.from_datasets(clients),
+        num_clients=len(clients),
+        controller=ControllerCore(ControllerConfig(eta=0.05,
+                                                   tau_max=TAU_MAX), C),
+    )
+    return TrainDriver(eng, p, overlap=1, seed=0, sanitize=sanitize)
+
+
+def test_round_loop_zero_steady_recompiles(svm_setup):
+    """Round 0 is the warmup; rounds 1..N-1 must hit the jit cache with
+    ZERO backend compiles — and sanitizing must not perturb the math
+    (params bitwise-identical to the unsanitized run)."""
+    model, clients, p = svm_setup
+    taus = np.full(C, 2, np.int32)
+
+    plain = _driver(model, clients, p).run(
+        model.init(jax.random.PRNGKey(0)), 4, taus)
+    drv = _driver(model, clients, p, sanitize=True)
+    log = drv.run(model.init(jax.random.PRNGKey(0)), 4, taus)
+
+    assert drv.sanitizer.compiles > 0, "warmup never compiled anything"
+    assert drv.sanitizer.steady_compiles == 0
+    np.testing.assert_array_equal(
+        np.asarray(log.params["w"]), np.asarray(plain.params["w"]))
+
+
+def test_seeded_nan_round_caught(svm_setup):
+    """A NaN seeded into the params poisons the very first round: under
+    sanitize the dispatch raises FloatingPointError at the offending
+    primitive; without it the NaN propagates silently."""
+    model, clients, p = svm_setup
+    taus = np.full(C, 2, np.int32)
+
+    def poisoned():  # engine rounds donate params — fresh tree per run
+        return jax.tree_util.tree_map(
+            lambda x: jnp.full_like(x, jnp.nan),
+            model.init(jax.random.PRNGKey(0)))
+
+    log = _driver(model, clients, p).run(poisoned(), 2, taus)  # silent
+    assert not np.isfinite(np.asarray(log.params["w"])).any()
+
+    with pytest.raises(FloatingPointError):
+        _driver(model, clients, p, sanitize=True).run(poisoned(), 2, taus)
+
+
+# ---------------------------------------------------------------------------
+# ServeLoop tick loop under sanitize: zero steady-state recompiles
+# ---------------------------------------------------------------------------
+
+
+def test_serve_tick_loop_zero_steady_recompiles():
+    """The sanitized serve run warms up on a cloned trace (every prefill
+    bucket compiles there), then replays the real trace asserting zero
+    compiles — with token streams identical to the unsanitized loop."""
+    model = build_model_by_name("starcoder2-3b", reduced=True)
+    params = model.init(jax.random.PRNGKey(0))
+    trace = poisson_trace(5, rate=1.0, plen_choices=(5, 9, 12),
+                          max_new_choices=(2, 4),
+                          vocab_size=model.config.vocab_size, seed=1)
+
+    plain_reqs = [r.clone() for r in trace]
+    ServeLoop(model, params, n_slots=3, capacity=32, bucket=8).run(plain_reqs)
+
+    san_reqs = [r.clone() for r in trace]
+    loop = ServeLoop(model, params, n_slots=3, capacity=32, bucket=8,
+                     sanitize=True)
+    loop.run(san_reqs)
+
+    assert loop.sanitizer.compiles > 0, "warmup never compiled anything"
+    assert loop.sanitizer.steady_compiles == 0
+    assert [r.out for r in san_reqs] == [r.out for r in plain_reqs]

@@ -389,3 +389,34 @@ def test_serve_example_scheduler_flags_parity():
     )
     assert r.returncode == 0, r.stdout + r.stderr
     assert "PARITY OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# kernel->mask chunk-prefill lowering: loud, structured, once
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_extend_fallback_warns_once(qwen, monkeypatch):
+    """`cache_update="kernel"` has no chunk-prefill variant yet (the open
+    §12.2 follow-up: a kernel extend path) — the lowering to the mask
+    path must announce itself ONCE per process via the structured
+    KernelExtendFallbackWarning, not silently."""
+    import warnings
+
+    from repro.models import transformer
+
+    model, params = qwen
+    monkeypatch.setattr(transformer, "_KERNEL_EXTEND_WARNED", False)
+
+    def build():
+        return PagedServeLoop(model, params, n_slots=3, capacity=32,
+                              page_size=8, bucket=8, prefill_chunk=8,
+                              cache_update="kernel")
+
+    with pytest.warns(transformer.KernelExtendFallbackWarning,
+                      match="§12.2"):
+        build()
+    with warnings.catch_warnings():  # second build: already warned
+        warnings.simplefilter("error",
+                              transformer.KernelExtendFallbackWarning)
+        build()
