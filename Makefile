@@ -4,7 +4,7 @@ export PYTHONPATH
 .PHONY: test test-fast collect test-sharded ci smoke lint sanitize \
 	bench-round-engine bench-controller-driver bench-sharded \
 	bench-buffered bench-serve bench-serve-paged bench-serve-slo \
-	bench-paged-kernel
+	bench-paged-kernel bench-wire
 
 test:
 	python -m pytest -x -q
@@ -50,6 +50,9 @@ bench-sharded:
 
 bench-buffered:
 	python benchmarks/buffered_round.py
+
+bench-wire:
+	python benchmarks/wire_compression.py
 
 bench-serve:
 	python benchmarks/serve_loop.py

@@ -31,6 +31,7 @@ from benchmarks import (  # noqa: E402
     serve_paged,
     serve_slo,
     sharded_round,
+    wire_compression,
 )
 from benchmarks.common import FULL, QUICK, emit  # noqa: E402
 
@@ -52,6 +53,7 @@ BENCHES = {
     "serve_loop": serve_loop.run,
     "serve_paged": serve_paged.run,
     "serve_slo": serve_slo.run,
+    "wire_compression": wire_compression.run,
 }
 
 

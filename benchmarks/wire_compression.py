@@ -1,0 +1,220 @@
+"""Wire codecs: bytes/round vs convergence (core/wire.py, DESIGN.md §15).
+
+Two sections, all appending JSONL rows to
+``experiments/wire_compression.jsonl``:
+
+  * ``identity_parity`` — the acceptance gate: an engine built with
+    wire='identity' must reproduce wire='none' BITWISE over a driver run
+    (tau trace exact, params byte-for-byte) — the bypass contract that
+    keeps the wire stage free when it is off. The process exits nonzero
+    on any mismatch — scripts/ci.sh runs ``--smoke`` in both lanes.
+  * ``grid`` — codec grid {none, int8, topk:K} on the non-IID svm-mnist
+    task: uplink bytes/round (the codec's PAYLOAD bytes, what the driver
+    rows record), compression_x vs the dense baseline, and the final
+    train/test loss gap the compression costs. The grid asserts the
+    headline: at least one lossy codec reaches >= 4x wire-byte reduction
+    (int8 tops out at ~3.98x — size*4/(size+4) — so the 4x gate is
+    carried by top-k; the int8 rows quantify the near-free ~4x point).
+
+Run standalone:
+
+    PYTHONPATH=src python benchmarks/wire_compression.py [--smoke]
+
+or through the registry (``make bench-wire`` /
+``python -m benchmarks.run --only wire_compression``).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.controller import ControllerConfig, ControllerCore  # noqa: E402
+from repro.core.driver import TrainDriver  # noqa: E402
+from repro.core.engine import EngineConfig, RoundEngine  # noqa: E402
+from repro.data.device import DeviceShards  # noqa: E402
+from repro.data.partition import partition_case3  # noqa: E402
+from repro.data.synthetic import (  # noqa: E402
+    Dataset,
+    binarize_even_odd,
+    make_classification,
+)
+from repro.fed.simulator import FederatedSimulator, FedSimConfig  # noqa: E402
+from repro.metrics.logger import format_bytes  # noqa: E402
+from repro.models.model import build_model_by_name  # noqa: E402
+
+TAU_MAX, BATCH, ETA = 4, 16, 0.05
+
+
+def _clients(C: int, n_per: int = 64, *, noniid=False):
+    orig = make_classification(C * n_per, (784,), 10, seed=1)
+    train = binarize_even_odd(orig)
+    if noniid:
+        parts = partition_case3(orig.y, C, seed=1)
+        return [Dataset(train.x[s], train.y[s]) for s in parts]
+    return [Dataset(train.x[i::C], train.y[i::C]) for i in range(C)]
+
+
+def _engine(model, ds, C, cohort, wire):
+    return RoundEngine(
+        model.loss,
+        EngineConfig(mode="fedveca", eta=ETA, tau_max=TAU_MAX,
+                     batch_size=BATCH, cohort_size=cohort, wire=wire),
+        shards=DeviceShards.from_datasets(ds),
+        num_clients=C,
+        controller=ControllerCore(ControllerConfig(eta=ETA, tau_max=TAU_MAX),
+                                  C),
+    )
+
+
+# ---------------------------------------------------------------------------
+# section 1: identity bypass parity gate (the CI smoke assertion)
+# ---------------------------------------------------------------------------
+
+
+def bench_identity_parity(rows, json_rows, rounds=4):
+    C, cohort = 16, 8
+    model = build_model_by_name("svm-mnist")
+    ds = _clients(C, 32)
+    p = np.full(C, 1.0 / C, np.float32)
+    taus0 = np.full(C, 2, np.int32)
+
+    logs, walls = {}, {}
+    for wire in ("none", "identity"):
+        drv = TrainDriver(_engine(model, ds, C, cohort, wire), p,
+                          overlap=1, seed=0)
+        t0 = time.perf_counter()
+        logs[wire] = drv.run(model.init(jax.random.PRNGKey(0)), rounds,
+                             taus0.copy())
+        walls[wire] = time.perf_counter() - t0
+
+    tau_exact = all(
+        np.array_equal(ra["tau"], rb["tau"])
+        for ra, rb in zip(logs["none"].rows, logs["identity"].rows)
+    )
+    params_bitwise = all(
+        np.asarray(a).tobytes() == np.asarray(b).tobytes()
+        for a, b in zip(jax.tree.leaves(logs["none"].params),
+                        jax.tree.leaves(logs["identity"].params))
+    )
+    if not (tau_exact and params_bitwise):
+        raise AssertionError(
+            f"wire=identity != wire=none: tau_exact={tau_exact} "
+            f"params_bitwise={params_bitwise}"
+        )
+    jrow = dict(bench="wire_compression", section="identity_parity", C=C,
+                cohort=cohort, rounds=rounds, tau_trace="exact",
+                params="bitwise",
+                none_wall_s=round(walls["none"], 3),
+                identity_wall_s=round(walls["identity"], 3))
+    json_rows.append(jrow)
+    print(json.dumps(jrow))
+    rows.append(dict(name="wire_compression/identity_parity",
+                     us_per_call=1e6 * walls["identity"] / rounds,
+                     derived="tau=exact|params=bitwise"))
+
+
+# ---------------------------------------------------------------------------
+# section 2: bytes/round vs convergence grid
+# ---------------------------------------------------------------------------
+
+
+def bench_grid(rows, json_rows, rounds=12, codecs=("int8", "topk:256",
+                                                   "topk:64")):
+    """Codec grid on the non-IID task: compression_x vs loss gap. Asserts
+    the >= 4x headline on the best lossy codec."""
+    C = 8
+    model = build_model_by_name("svm-mnist")
+    ds = _clients(C, 96, noniid=True)
+    test = binarize_even_odd(make_classification(500, (784,), 10, seed=2))
+    base = dict(mode="fedveca", rounds=rounds, tau_max=TAU_MAX,
+                batch_size=BATCH, eta=ETA)
+
+    out = {}
+    for wire in ("none",) + tuple(codecs):
+        t0 = time.perf_counter()
+        log = FederatedSimulator(model, ds, FedSimConfig(**base, wire=wire),
+                                 test).run()
+        wall = time.perf_counter() - t0
+        out[wire] = dict(
+            bytes_per_round=int(log.rows[-1]["wire_bytes"]),
+            final_loss=float(log.rows[-1]["train_loss"]),
+            test_loss=float(log.rows[-1]["test_loss"]),
+            wall_s=wall,
+        )
+
+    dense = out["none"]
+    best_x = 0.0
+    for wire, o in out.items():
+        comp = dense["bytes_per_round"] / o["bytes_per_round"]
+        best_x = max(best_x, comp) if wire != "none" else best_x
+        jrow = dict(bench="wire_compression", section="grid", C=C,
+                    rounds=rounds, wire=wire,
+                    bytes_per_round=o["bytes_per_round"],
+                    compression_x=round(comp, 3),
+                    final_loss=round(o["final_loss"], 6),
+                    test_loss=round(o["test_loss"], 6),
+                    loss_gap_vs_none=round(
+                        o["final_loss"] - dense["final_loss"], 6),
+                    test_gap_vs_none=round(
+                        o["test_loss"] - dense["test_loss"], 6),
+                    wall_s=round(o["wall_s"], 3))
+        json_rows.append(jrow)
+        print(json.dumps(jrow))
+        rows.append(dict(
+            name=f"wire_compression/grid/{wire}",
+            us_per_call=1e6 * o["wall_s"] / rounds,
+            derived=f"{format_bytes(o['bytes_per_round'])}/round|"
+                    f"{comp:.2f}x|gap={o['final_loss'] - dense['final_loss']:+.4f}"))
+    if best_x < 4.0:
+        raise AssertionError(
+            f"no codec reached the 4x wire-byte reduction gate "
+            f"(best {best_x:.2f}x)"
+        )
+
+
+# ---------------------------------------------------------------------------
+# registry entrypoint
+# ---------------------------------------------------------------------------
+
+
+def run(scale=None, out_rows: list = None, csv_dir=None, *, smoke=False,
+        json_path=None):
+    rows = out_rows if out_rows is not None else []
+    json_rows: list = []
+    bench_identity_parity(rows, json_rows)
+    if smoke:
+        # fast lane: parity gate + a 2-codec probe of the 4x assertion
+        bench_grid(rows, json_rows, rounds=3, codecs=("int8", "topk:64"))
+    else:
+        bench_grid(rows, json_rows)
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "a") as f:
+            for jrow in json_rows:
+                f.write(json.dumps(jrow) + "\n")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: identity parity gate + 2-codec 4x probe")
+    ap.add_argument("--json", default="experiments/wire_compression.jsonl")
+    args = ap.parse_args()
+    run(smoke=args.smoke, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

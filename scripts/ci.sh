@@ -49,6 +49,11 @@ if [ "$MODE" = fast ]; then
   # grad_decay=1.0 must reproduce the sync TrainDriver's tau trace
   # exactly and its params bitwise — any drift exits nonzero here
   python benchmarks/buffered_round.py --smoke
+  echo "== smoke: benchmarks/wire_compression.py (identity-parity + 4x) =="
+  # the wire-stage acceptance gate: wire=identity must stay bitwise-equal
+  # to wire=none (tau trace exact, params byte-for-byte) and a lossy
+  # codec must clear the 4x uplink-byte reduction bar
+  python benchmarks/wire_compression.py --smoke
   echo "CI OK (fast lane)"
   exit 0
 fi
@@ -71,6 +76,8 @@ if [ "$MODE" = "all" ]; then
   python benchmarks/sharded_round.py --smoke
   echo "== smoke: benchmarks/buffered_round.py =="
   python benchmarks/buffered_round.py --smoke
+  echo "== smoke: benchmarks/wire_compression.py =="
+  python benchmarks/wire_compression.py --smoke
   echo "== smoke: benchmarks/serve_loop.py =="
   python benchmarks/serve_loop.py --smoke
   echo "== smoke: benchmarks/serve_paged.py =="

@@ -321,10 +321,16 @@ class BufferedRoundEngine(AdmissionScheduler):
                else np.asarray(cohort, np.int32))
         self._key, sub = jax.random.split(self._key)
         t0 = time.perf_counter()
-        outs = eng._wave(
+        outs, new_res = eng._wave(
             self._params, self._data, sub, self._cstate.taus,
             self._cstate.prev_grad_sqnorm, eng._prep_cohort(ids),
+            eng._wire_state(self._params, eng.num_clients),
         )
+        if eng.wire_active:
+            # streaming waves advance the error-feedback rows at dispatch
+            # time (keyed by global client id), so arrivals folded rounds
+            # later still compose with the client's next dispatch
+            eng._wire_res = new_res
         self.dispatch_s += time.perf_counter() - t0
         self.wave_dispatches += 1
         w = self._next_wave
@@ -424,6 +430,8 @@ class BufferedRoundEngine(AdmissionScheduler):
         same rng/key discipline, one row per commit)."""
         eng = self.engine
         log = logger or RunLogger(None, name=self.mode)
+        eng.reset_wire()  # fresh error-feedback residuals per run
+        self._wire_bpc = eng.wire_bytes_per_client(params)
         self._rng = np.random.default_rng(self.bcfg.seed)
         self._key = jax.random.PRNGKey(self.bcfg.seed)
         self._cstate = eng.init_controller_state(params, taus)
@@ -514,6 +522,8 @@ class BufferedRoundEngine(AdmissionScheduler):
             mean_age=float(host["mean_age"]),
             max_age=float(host["max_age"]),
             sim_time=self._now,
+            wire=self.engine.wire_codec.name,
+            wire_bytes=self._wire_bpc * self.m,
         )
         if ev_host:
             row.update(ev_host)

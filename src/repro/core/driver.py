@@ -151,6 +151,10 @@ class TrainDriver:
         logger with ``.params`` (final, donated-through) and ``.tau_all``."""
         engine = self.engine
         log = logger or RunLogger(None, name=self.mode)
+        engine.reset_wire()  # fresh error-feedback residuals per run
+        # static per-client wire cost (core/wire.py): what one client's
+        # update upload costs under the engine's codec, dense for identity
+        self._wire_bpc = engine.wire_bytes_per_client(params)
         rng = np.random.default_rng(self.seed)
         key = jax.random.PRNGKey(self.seed)
         cstate = engine.init_controller_state(params, taus)
@@ -222,6 +226,10 @@ class TrainDriver:
             L=float(host["L"]),
             premise=float(host["premise"]),
             alpha_k=float(host["alpha_k"]),
+            wire=self.engine.wire_codec.name,
+            wire_bytes=self._wire_bpc * (
+                len(cohort) if cohort is not None else self.engine.controller.C
+            ),
         )
         if ev_host:
             row.update(ev_host)

@@ -79,6 +79,10 @@ class EngineConfig:
     donate: bool = True  # donate params (+ scaffold) buffers to the round
     unroll_tau: bool = False
     stat_dtype: Any = jnp.float32
+    wire: Any = "none"  # client->server update codec (core/wire.py):
+    #   'none'/'identity' | 'int8' | 'topk:K' | a WireCodec. Non-identity
+    #   codecs carry per-client error-feedback residuals as engine state
+    #   ([C, ...] rows, client-sharded under a mesh, donated per round).
 
 
 class RoundEngine:
@@ -159,11 +163,27 @@ class RoundEngine:
 
         self._strategy = get_strategy(cfg.mode, mu=cfg.mu)
         self._reduce = make_reduce(cfg.aggregator)
+
+        # -- wire stage (core/wire.py, DESIGN.md §15) -----------------------
+        from repro.core.wire import make_codec
+
+        self.wire_codec = make_codec(cfg.wire)
+        # identity bypasses entirely: no residual state, no extra ops in
+        # the trace — the bit-identity contract vs the pre-wire engine
+        self._wire_active = not self.wire_codec.is_identity
+        if self._wire_active and self._strategy.uses_scaffold:
+            raise ValueError(
+                f"mode {cfg.mode!r} aggregates parameter deltas, not cum_g; "
+                "wire compression is not supported (use wire='none')"
+            )
+        self._wire_res = None  # [C, ...] error-feedback rows, lazily built
+
         axis_name = self._client_axes if self.sharded else None
         self._round = make_round_step(
             loss_fn, eta=cfg.eta, tau_max=cfg.tau_max, mode=cfg.mode,
             mu=cfg.mu, unroll_tau=cfg.unroll_tau, stat_dtype=cfg.stat_dtype,
             aggregator=cfg.aggregator, axis_name=axis_name,
+            wire=self.wire_codec if self._wire_active else None,
         )
         self._local = make_local_update(
             loss_fn, eta=cfg.eta, tau_max=cfg.tau_max, strategy=self._strategy,
@@ -171,8 +191,13 @@ class RoundEngine:
         )
 
         def round_body(params, data, key, batches, tau, p, gprev_sqnorm,
-                       scaffold, cohort, offset=None):
+                       scaffold, cohort, residual, offset=None):
             """Shared cohort/data/scaffold plumbing around the fused round.
+
+            ``residual`` (wire stage, [C, ...] error-feedback rows or
+            None) is gathered/scattered per cohort exactly like SCAFFOLD's
+            ``c_i``: rows are keyed by client id, pads clamp on gather and
+            drop on scatter, and under shard_map the tree is shard-local.
 
             One body serves both execution modes. ``offset=None`` is the
             single-device path. Inside shard_map, ``offset`` is this
@@ -223,10 +248,23 @@ class RoundEngine:
                 )
             elif cohort is not None:
                 batches = jax.tree.map(lambda x: x[local], batches)
+            res_rows = residual
+            if residual is not None and cohort is not None:
+                # pad rows (local == C_loc) clamp-gather a neighbor's
+                # residual, but their decoded output weighs 0 in the
+                # reduce and their scatter below is dropped (OOB)
+                res_rows = jax.tree.map(lambda x: x[local], residual)
             with self._context():
-                new_params, stats, new_scaffold = self._round(
-                    params, batches, tau, pw, gprev_sqnorm, sub_scaffold
-                )
+                if residual is not None:
+                    new_params, stats, new_scaffold, new_res_rows = (
+                        self._round(params, batches, tau, pw, gprev_sqnorm,
+                                    sub_scaffold, res_rows)
+                    )
+                else:
+                    new_params, stats, new_scaffold = self._round(
+                        params, batches, tau, pw, gprev_sqnorm, sub_scaffold
+                    )
+                    new_res_rows = None
             if cohort is not None and scaffold is not None and new_scaffold is not None:
                 new_scaffold = ScaffoldState(
                     c=new_scaffold.c,
@@ -235,22 +273,31 @@ class RoundEngine:
                         scaffold.c_i, new_scaffold.c_i,
                     ),
                 )
-            return new_params, stats, new_scaffold, pw
+            new_residual = residual
+            if residual is not None:
+                new_residual = (
+                    new_res_rows if cohort is None
+                    else jax.tree.map(
+                        lambda full, rows: full.at[local].set(rows),
+                        residual, new_res_rows,
+                    )
+                )
+            return new_params, stats, new_scaffold, pw, new_residual
 
         def sharded_body(params, data, key, batches, tau, p, gprev_sqnorm,
-                         scaffold, cohort):
+                         scaffold, cohort, residual):
             sidx = jnp.int32(0)
             for a in self._client_axes:
                 sidx = sidx * mesh.shape[a] + jax.lax.axis_index(a)
             return round_body(params, data, key, batches, tau, p,
-                              gprev_sqnorm, scaffold, cohort,
+                              gprev_sqnorm, scaffold, cohort, residual,
                               offset=sidx * self._local_C)
 
         def dispatch_round(params, data, key, batches, tau, p, gprev_sqnorm,
-                           scaffold, cohort):
+                           scaffold, cohort, residual):
             if not self.sharded:
                 return round_body(params, data, key, batches, tau, p,
-                                  gprev_sqnorm, scaffold, cohort)
+                                  gprev_sqnorm, scaffold, cohort, residual)
             # build the shard_map at trace time: in/out specs depend on
             # which optional args (batches/scaffold/cohort) are present
             from repro.core.fedveca import RoundStats
@@ -269,31 +316,37 @@ class RoundEngine:
                 None if scaffold is None
                 else ScaffoldState(c=rs(scaffold.c), c_i=cs(scaffold.c_i))
             )
+            res_spec = None if residual is None else cs(residual)
             in_specs = (rs(params), cs(data), None if key is None else rep,
                         cs(batches), cspec, cspec, rep, scaf_spec,
-                        None if cohort is None else cspec)
+                        None if cohort is None else cspec, res_spec)
             stats_spec = RoundStats(
                 loss0=cspec, beta=cspec, delta=cspec, g0_sqnorm=cspec,
                 tau=cspec, tau_k=rep, global_grad=rs(params),
                 update_sqnorm=rep, params_sqnorm=rep, global_grad_sqnorm=rep,
             )
-            out_specs = (rs(params), stats_spec, scaf_spec, cspec)
+            out_specs = (rs(params), stats_spec, scaf_spec, cspec, res_spec)
             return shard_map(
                 sharded_body, mesh=mesh, in_specs=in_specs,
                 out_specs=out_specs, check_rep=False,
             )(params, data, key, batches, tau, p, gprev_sqnorm, scaffold,
-              cohort)
+              cohort, residual)
 
-        def step(params, data, key, batches, tau, p, gprev_sqnorm, scaffold, cohort):
-            new_params, stats, new_scaffold, _ = dispatch_round(
-                params, data, key, batches, tau, p, gprev_sqnorm, scaffold, cohort
+        def step(params, data, key, batches, tau, p, gprev_sqnorm, scaffold,
+                 cohort, residual):
+            new_params, stats, new_scaffold, _, new_residual = dispatch_round(
+                params, data, key, batches, tau, p, gprev_sqnorm, scaffold,
+                cohort, residual,
             )
-            return new_params, stats, new_scaffold
+            return new_params, stats, new_scaffold, new_residual
 
         donate = (0, 7) if cfg.donate else ()  # params, scaffold
+        if cfg.donate and self._wire_active:
+            donate = donate + (9,)  # error-feedback residual rows
         self._step = jax.jit(step, donate_argnums=donate)
 
-        def fused(params, cstate, data, key, batches, p, scaffold, cohort):
+        def fused(params, cstate, data, key, batches, p, scaffold, cohort,
+                  residual):
             """Round k + controller update as ONE dispatch (DESIGN.md §10).
 
             taus and ||grad F(w_{k-1})||^2 come from the device-resident
@@ -302,9 +355,9 @@ class RoundEngine:
             caller decides when to block on them.
             """
             taus_full = jnp.clip(cstate.taus, 1, cfg.tau_max)
-            new_params, stats, new_scaffold, pw = dispatch_round(
+            new_params, stats, new_scaffold, pw, new_residual = dispatch_round(
                 params, data, key, batches, taus_full, p,
-                cstate.prev_grad_sqnorm, scaffold, cohort,
+                cstate.prev_grad_sqnorm, scaffold, cohort, residual,
             )
             C = taus_full.shape[0]
             cohort_flat = None if cohort is None else cohort.reshape(-1)
@@ -330,11 +383,13 @@ class RoundEngine:
                 tau_round_sum=tau_round_sum,
                 update_sqnorm=stats.update_sqnorm,
             )
-            return new_params, new_cstate, new_scaffold, diag
+            return new_params, new_cstate, new_scaffold, new_residual, diag
 
         if controller is not None:
             fused_donate = (0, 1, 6) if cfg.donate else ()  # params, cstate,
-            self._fused = jax.jit(fused, donate_argnums=fused_donate)  # scaffold
+            if cfg.donate and self._wire_active:                   # scaffold
+                fused_donate = fused_donate + (8,)  # wire residual rows
+            self._fused = jax.jit(fused, donate_argnums=fused_donate)
 
         def client_update(params, batches_c, tau_c, gprev_sqnorm):
             with self._context():
@@ -369,7 +424,7 @@ class RoundEngine:
         self._client_update_many = jax.jit(client_update_many)
 
         def wave_update(params, data, key, taus, gprev_sqnorm, cohort,
-                        offset=None):
+                        residual, offset=None):
             """One dispatch wave of the buffered engine (core/buffered.py):
             the cohort's Alg. 2 local updates against ONE params version,
             returning per-slot gradient accumulators + stats. This is exactly
@@ -393,45 +448,67 @@ class RoundEngine:
                 outs = jax.vmap(
                     self._local, in_axes=(None, 0, 0, None, None, 0)
                 )(params, batches, tau, gprev_sqnorm, zeros, zrows)
+            cum_g = outs["cum_g"]
+            new_residual = residual
+            if residual is not None:
+                # wire stage on the streaming path: residual rows are keyed
+                # by GLOBAL client id (shard-local gather by `local`), so
+                # arrivals folded rounds later still telescope correctly
+                from repro.core.wire import wire_fold
+
+                rows = jax.tree.map(lambda x: x[local], residual)
+                cum_g, new_rows = wire_fold(self.wire_codec, cum_g, rows)
+                new_residual = jax.tree.map(
+                    lambda full, r: full.at[local].set(r), residual, new_rows
+                )
             # raw accumulators, NOT normalized: the buffered commit routes
             # through strategy.server_delta exactly like the sync round, so
             # every mode's op sequence (and bitwise result) is preserved
-            return dict(cum_g=outs["cum_g"], g0=outs["g0"],
+            return dict(cum_g=cum_g, g0=outs["g0"],
                         loss0=outs["loss0"], beta=outs["beta"],
-                        delta=outs["delta"], tau=tau)
+                        delta=outs["delta"], tau=tau), new_residual
 
-        def dispatch_wave(params, data, key, taus, gprev_sqnorm, cohort):
+        def dispatch_wave(params, data, key, taus, gprev_sqnorm, cohort,
+                          residual):
             if not self.sharded:
                 return wave_update(params, data, key, taus, gprev_sqnorm,
-                                   cohort)
+                                   cohort, residual)
             cspec = P(self._client_axes if len(self._client_axes) > 1
                       else self._client_axes[0])
             rep = P()
 
-            def sharded_wave(params, data, key, taus, gprev_sqnorm, cohort):
+            def sharded_wave(params, data, key, taus, gprev_sqnorm, cohort,
+                             residual):
                 sidx = jnp.int32(0)
                 for a in self._client_axes:
                     sidx = sidx * mesh.shape[a] + jax.lax.axis_index(a)
                 return wave_update(params, data, key, taus, gprev_sqnorm,
-                                   cohort, offset=sidx * self._local_C)
+                                   cohort, residual,
+                                   offset=sidx * self._local_C)
 
+            res_spec = (None if residual is None
+                        else jax.tree.map(lambda _: cspec, residual))
             in_specs = (
                 jax.tree.map(lambda _: rep, params),
                 jax.tree.map(lambda _: cspec, data),
-                rep, cspec, rep, cspec,
+                rep, cspec, rep, cspec, res_spec,
             )
-            out_specs = dict(
+            out_specs = (dict(
                 cum_g=jax.tree.map(lambda _: cspec, params),
                 g0=jax.tree.map(lambda _: cspec, params),
                 loss0=cspec, beta=cspec, delta=cspec, tau=cspec,
-            )
+            ), res_spec)
             return shard_map(
                 sharded_wave, mesh=mesh, in_specs=in_specs,
                 out_specs=out_specs, check_rep=False,
-            )(params, data, key, taus, gprev_sqnorm, cohort)
+            )(params, data, key, taus, gprev_sqnorm, cohort, residual)
 
         # buffered wave dispatch needs the device data path (shards)
-        self._wave = jax.jit(dispatch_wave) if shards is not None else None
+        wave_donate = (6,) if (cfg.donate and self._wire_active) else ()
+        self._wave = (
+            jax.jit(dispatch_wave, donate_argnums=wave_donate)
+            if shards is not None else None
+        )
 
         def server_aggregate(params, G_stacked, tau, p):
             tau_f = tau.astype(jnp.float32)
@@ -459,10 +536,16 @@ class RoundEngine:
         p = jnp.asarray(p, jnp.float32)
         cohort = self._prep_cohort(cohort)
         scaffold = self._materialize_scaffold(scaffold, params, int(tau.shape[0]))
+        residual = self._wire_state(params, int(tau.shape[0]))
         with _quiet_donation():
-            return self._step(params, data, key, batches, tau, p,
-                              jnp.asarray(gprev_sqnorm, jnp.float32), scaffold,
-                              cohort)
+            new_params, stats, new_scaffold, new_res = self._step(
+                params, data, key, batches, tau, p,
+                jnp.asarray(gprev_sqnorm, jnp.float32), scaffold, cohort,
+                residual,
+            )
+        if self._wire_active:
+            self._wire_res = new_res
+        return new_params, stats, new_scaffold
 
     # -- fused round + controller (core/driver.TrainDriver) -----------------
     def init_controller_state(self, params, taus):
@@ -486,9 +569,15 @@ class RoundEngine:
         p = jnp.asarray(p, jnp.float32)
         cohort = self._prep_cohort(cohort)
         scaffold = self._materialize_scaffold(scaffold, params, self.controller.C)
+        residual = self._wire_state(params, self.controller.C)
         with _quiet_donation():
-            return self._fused(params, cstate, data, key, batches, p, scaffold,
-                               cohort)
+            new_params, new_cstate, new_scaffold, new_res, diag = self._fused(
+                params, cstate, data, key, batches, p, scaffold, cohort,
+                residual,
+            )
+        if self._wire_active:
+            self._wire_res = new_res
+        return new_params, new_cstate, new_scaffold, diag
 
     def _prep_cohort(self, cohort):
         """Host-side cohort normalization. Single-device: int32 [m].
@@ -547,6 +636,50 @@ class RoundEngine:
                 lambda x: jnp.zeros((C,) + x.shape, jnp.float32), params
             ),
         )
+
+    # -- wire stage state (core/wire.py, DESIGN.md §15) ----------------------
+    @property
+    def wire_active(self) -> bool:
+        """True when a non-identity codec compresses the update wire."""
+        return self._wire_active
+
+    def reset_wire(self) -> None:
+        """Drop the error-feedback residuals (start of a fresh run)."""
+        self._wire_res = None
+
+    def _wire_state(self, params, C: int):
+        """Materialize-or-return the full-C residual rows ([C, ...] zeros
+        in stat_dtype, client-sharded under a mesh). None when inactive.
+        Like the scaffold, the full state exists from round 0 so the jit
+        trace is unique and cohort rows stay keyed by client id."""
+        if not self._wire_active:
+            return None
+        if self._wire_res is None:
+            rows = jax.tree.map(
+                lambda x: jnp.zeros((C,) + x.shape, self.cfg.stat_dtype),
+                params,
+            )
+            if self.sharded:
+                from repro.sharding.api import client_sharding
+
+                rows = jax.tree.map(
+                    lambda x: jax.device_put(
+                        x, client_sharding(self.mesh, x.ndim)
+                    ),
+                    rows,
+                )
+            self._wire_res = rows
+        return self._wire_res
+
+    def wire_bytes_per_client(self, params) -> int:
+        """Static wire bytes ONE client's update costs under the codec
+        (the dense stat_dtype bytes for the identity/none codec)."""
+        like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape,
+                                           np.dtype(self.cfg.stat_dtype)),
+            params,
+        )
+        return self.wire_codec.payload_nbytes(like)
 
     # -- message-passing halves (fed/prototype.py) --------------------------
     def client_update(self, params, batches_c, tau: int, gprev_sqnorm):

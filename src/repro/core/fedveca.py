@@ -173,6 +173,11 @@ def make_round_step(
     #   local shard's clients, the server reduce becomes shard-local
     #   partial + jax.lax.psum, and every cross-client scalar (tau_k, the
     #   global gradient) is psum-completed (DESIGN.md §11)
+    wire=None,  # active WireCodec (core/wire.py): the per-client cum_g
+    #   rows pass through an error-feedback encode/decode ahead of the
+    #   server reduce (decode-before-reduce — Pallas vecavg and the
+    #   fallback reduce are untouched). None/identity = the pre-wire
+    #   trace, bit-identical.
 ) -> Callable:
     """Build the jitted federated round.
 
@@ -187,11 +192,23 @@ def make_round_step(
                     line 14/17); pass 0.0 in round 0 (delta falls back to 1)
       -> (new_params, RoundStats, new_scaffold)
 
+    With ``wire`` an extra trailing ``residual`` argument (leaves
+    [C, ...], this cohort's error-feedback rows) is consumed and the
+    return grows to ``(new_params, stats, new_scaffold, new_residual)``.
+
     With ``axis_name`` the same contract holds per shard: C is the LOCAL
     client count, per-client stats come back local-sized, and the model-
     sized outputs (new_params, global_grad) are replicated across shards.
     """
     assert mode in MODES, mode
+    if wire is not None and getattr(wire, "is_identity", False):
+        wire = None  # identity short-circuits: keep the pre-wire trace
+    if wire is not None and mode == "scaffold":
+        raise ValueError(
+            "wire compression applies to the cum_g update; scaffold "
+            "aggregates parameter deltas and is not supported with a "
+            "non-identity wire codec"
+        )
     strategy = get_strategy(mode, mu=mu)
     reduce = make_reduce(aggregator)
     if axis_name is not None:
@@ -201,7 +218,8 @@ def make_round_step(
         unroll_tau=unroll_tau, stat_dtype=stat_dtype,
     )
 
-    def round_step(params, batches, tau, p, gprev_sqnorm, scaffold: Optional[ScaffoldState] = None):
+    def round_step(params, batches, tau, p, gprev_sqnorm,
+                   scaffold: Optional[ScaffoldState] = None, residual=None):
         C = tau.shape[0]
         tau_f = tau.astype(jnp.float32)
         c_server = scaffold.c if scaffold is not None else tree_zeros_like(params)
@@ -214,6 +232,17 @@ def make_round_step(
         outs = jax.vmap(
             local_update, in_axes=(None, 0, 0, None, None, 0)
         )(params, batches, tau, gprev_sqnorm, c_server, c_client)
+
+        new_residual = residual
+        if wire is not None:
+            # wire stage (DESIGN.md §15): per-client error-feedback
+            # encode/decode of the raw accumulators, BEFORE the strategy
+            # normalizes/reduces — every mode and both reduce paths see
+            # decoded dense rows and stay untouched.
+            from repro.core.wire import wire_fold
+
+            decoded, new_residual = wire_fold(wire, outs["cum_g"], residual)
+            outs = dict(outs, cum_g=decoded)
 
         tau_k = global_sum(p * tau_f, axis_name)
         delta_w = strategy.server_delta(outs, params, tau_f, p, eta, reduce,
@@ -241,6 +270,8 @@ def make_round_step(
             params_sqnorm=tree_sqnorm(params),
             global_grad_sqnorm=tree_sqnorm(global_grad),
         )
+        if wire is not None:
+            return new_params, stats, new_scaffold, new_residual
         return new_params, stats, new_scaffold
 
     return round_step

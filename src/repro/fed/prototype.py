@@ -41,10 +41,14 @@ import numpy as np
 from repro.core.controller import ControllerConfig, FedVecaController
 from repro.core.engine import EngineConfig, RoundEngine
 from repro.core.tree import tree_sqnorm
+from repro.core.wire import IdentityCodec, make_codec
 from repro.data.device import format_batch
 
 
 def _tree_bytes(t) -> int:
+    """Wire bytes of a message pytree. Applied to the codec's *payload*
+    (core/wire.py), so lossy codecs are billed for int8 buffers / top-k
+    pairs — not the dense f32 tree they decode back into."""
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
 
 
@@ -67,6 +71,29 @@ class FedVecaClient:
         # seed-reproducibility path (see data/synthetic.py RNG note)
         self.rng = np.random.RandomState(seed + client_id)
         self._engine = None  # built lazily: the batched fabric never needs it
+        # Wire stage (DESIGN.md §15): the server installs its codec on every
+        # client; lossy codecs keep this client's error-feedback residual
+        # here, exactly where a testbed device would keep it.
+        self.wire = IdentityCodec()
+        self._wire_res = None
+
+    def send_update(self, G):
+        """Alg. 2 send: compress G through the wire codec with error
+        feedback. Returns the payload the wire carries (dense G under the
+        identity codec — bitwise, no residual state)."""
+        if self.wire.is_identity:
+            return G
+        if self._wire_res is None:
+            self._wire_res = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), G
+            )
+        total = jax.tree.map(
+            lambda u, r: u + r.astype(u.dtype), G, self._wire_res
+        )
+        payload = self.wire.encode(total)
+        decoded = self.wire.decode(payload, total)
+        self._wire_res = jax.tree.map(jnp.subtract, total, decoded)
+        return payload
 
     @property
     def engine(self) -> RoundEngine:
@@ -99,7 +126,8 @@ class FedVecaClient:
         tau = int(msg["tau"])
         gprev_sqnorm = float(msg.get("gprev_sqnorm", 0.0))
         out = self.engine.client_update(w_k, self._batches(tau), tau, gprev_sqnorm)
-        return dict(id=self.id, G=out["G"], g0=out["g0"],
+        return dict(id=self.id, G=self.send_update(out["G"]),
+                    g0=self.wire.encode(out["g0"]),
                     beta=float(out["beta"]), delta=float(out["delta"]),
                     loss0=float(out["loss0"]), tau=tau)
 
@@ -109,13 +137,18 @@ class FedVecaServer:
 
     def __init__(self, model, clients: List[FedVecaClient], p: np.ndarray,
                  eta: float, alpha: float = 0.95, tau_max: int = 50,
-                 tau_init: int = 2, seed: int = 0, batched: bool = True):
+                 tau_init: int = 2, seed: int = 0, batched: bool = True,
+                 wire="none"):
         self.model = model
         self.clients = clients
         self.p = np.asarray(p, np.float64)
         self.eta = eta
         self.batched = batched  # one client_update_many dispatch per round
         self.tau_max = tau_max
+        self.wire = make_codec(wire)
+        for c in clients:  # one codec for the whole deployment
+            c.wire = self.wire
+            c._wire_res = None
         self.engine = RoundEngine(
             model.loss,
             EngineConfig(mode="fedveca", eta=eta, tau_max=tau_max, donate=False),
@@ -164,10 +197,12 @@ class FedVecaServer:
         outs = self.engine.client_update_many(
             self.params, stacked, taus, float(self.gprev_sqnorm)
         )
+        # Each reply still leaves through ITS client's codec state: the
+        # batched fabric shares the accelerator, not the wire.
         return [
             dict(id=c.id,
-                 G=jax.tree.map(lambda x: x[i], outs["G"]),
-                 g0=jax.tree.map(lambda x: x[i], outs["g0"]),
+                 G=c.send_update(jax.tree.map(lambda x, i=i: x[i], outs["G"])),
+                 g0=c.wire.encode(jax.tree.map(lambda x, i=i: x[i], outs["g0"])),
                  beta=float(outs["beta"][i]), delta=float(outs["delta"][i]),
                  loss0=float(outs["loss0"][i]), tau=int(taus[i]))
             for i, c in enumerate(self.clients)
@@ -177,9 +212,17 @@ class FedVecaServer:
         from repro.core.fedveca import RoundStats
 
         params_start = self.params
+        recv_before = self.bytes_recv
         replies = self._collect_replies()
         for reply in replies:
+            # replies carry codec payloads — these ARE the uplink bytes
             self.bytes_recv += _tree_bytes(reply["G"]) + _tree_bytes(reply["g0"]) + 24
+        if not self.wire.is_identity:
+            # decode-before-reduce: the aggregation below runs on dense
+            # trees shaped like params, exactly as with wire off
+            for reply in replies:
+                reply["G"] = self.wire.decode(reply["G"], self.params)
+                reply["g0"] = self.wire.decode(reply["g0"], self.params)
 
         p32 = np.asarray(self.p, np.float32)
         G_stacked = _stack([r["G"] for r in replies])
@@ -209,7 +252,7 @@ class FedVecaServer:
         self.gprev_sqnorm = float(tree_sqnorm(global_grad))
         row = dict(round=len(self.history), tau=self.taus.copy(), **{
             k: diag.get(k) for k in ("L", "premise", "alpha_k")
-        })
+        }, wire=self.wire.name, wire_bytes=self.bytes_recv - recv_before)
         self.history.append(row)
         return row
 

@@ -67,6 +67,8 @@ class FedSimConfig:
     aggregator: str = "auto"  # 'pallas' | 'fallback' | 'auto'
     data_path: str = "device"  # 'device' (resident shards) | 'host' (legacy)
     donate: bool = True
+    wire: str = "none"  # client->server codec: none | int8 | topk:K
+    #   (core/wire.py; error-feedback residuals live in engine state)
     # -- driver knobs -------------------------------------------------------
     overlap: int = 1  # in-flight rounds before host sync; 0 = sync mode
     stats_decay: float = 0.9  # staleness retention for unobserved clients
@@ -114,7 +116,7 @@ class FederatedSimulator:
             EngineConfig(
                 mode=cfg.mode, eta=cfg.eta, tau_max=cfg.tau_max, mu=cfg.mu,
                 batch_size=cfg.batch_size, cohort_size=cfg.cohort_size,
-                aggregator=cfg.aggregator, donate=cfg.donate,
+                aggregator=cfg.aggregator, donate=cfg.donate, wire=cfg.wire,
             ),
             shards=shards,
             num_clients=self.C,

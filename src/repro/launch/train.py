@@ -47,6 +47,7 @@ from repro.launch.mesh import (
     make_production_mesh,
     num_clients,
 )
+from repro.metrics.logger import format_bytes
 from repro.models.model import build_model
 from repro.sharding.api import logical_axis_rules
 
@@ -66,6 +67,10 @@ def main():
                     help="participating clients per round (default: all)")
     ap.add_argument("--aggregator", default="auto",
                     choices=("auto", "pallas", "fallback"))
+    ap.add_argument("--wire", default="none", metavar="none|int8|topk:K",
+                    help="client->server update codec with error feedback "
+                         "(core/wire.py); none is bit-identical to the "
+                         "pre-wire engine")
     ap.add_argument("--host-data", action="store_true",
                     help="legacy path: build batches on host, upload per round")
     ap.add_argument("--overlap", type=int, default=1,
@@ -125,7 +130,8 @@ def main():
           f"global_batch={shape.global_batch} seq={shape.seq_len} "
           f"sharded={fed_mesh is not None} "
           f"data={'host' if args.host_data else 'device'} "
-          f"cohort={args.cohort or C} overlap={args.overlap}")
+          f"cohort={args.cohort or C} overlap={args.overlap} "
+          f"wire={args.wire}")
 
     datasets = [
         make_lm_tokens(64, args.seq, cfg.vocab_size, topic=i, seed=args.seed)
@@ -138,7 +144,7 @@ def main():
         EngineConfig(
             mode=args.mode, eta=args.eta, tau_max=args.tau_max,
             batch_size=args.batch_per_client, cohort_size=args.cohort,
-            aggregator=args.aggregator,
+            aggregator=args.aggregator, wire=args.wire,
         ),
         shards=(
             None if args.host_data
@@ -160,9 +166,13 @@ def main():
 
     def on_row(row):
         now = time.time()
+        wire = ""
+        if row.get("wire", "identity") != "identity":
+            wire = (f" wire[{row['wire']}]="
+                    f"{format_bytes(row['wire_bytes'])}/round")
         print(f"round {row['round']}: loss={row['train_loss']:.4f} "
               f"tau_k={row['tau_k']:.2f} tau_next={np.asarray(row['tau']).tolist()} "
-              f"({now - t_last[0]:.1f}s)")
+              f"({now - t_last[0]:.1f}s){wire}")
         t_last[0] = now
 
     if args.buffered:

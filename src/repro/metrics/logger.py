@@ -30,6 +30,18 @@ def percentile(values, q: float) -> float:
     return float(np.percentile(arr, q))
 
 
+def format_bytes(n) -> str:
+    """Human-readable byte count for wire-cost reporting (``wire_bytes``
+    rows from TrainDriver / BufferedRoundEngine / FedVecaServer):
+    1536 -> '1.5KiB'. Exact integer below 1KiB."""
+    n = float(n)
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0 or unit == "TiB":
+            return f"{int(n)}{unit}" if unit == "B" else f"{n:.1f}{unit}"
+        n /= 1024.0
+    return f"{n:.1f}TiB"  # unreachable; keeps the return type obvious
+
+
 def latency_summary(values, prefix: str = "") -> Dict[str, float]:
     """p50/p95/p99/mean/n over a latency sample, keys prefixed — the
     shape benchmarks/serve_slo.py emits per variant (ttft_p99, itl_p50,

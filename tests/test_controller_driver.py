@@ -407,3 +407,78 @@ def test_simulator_partial_participation_end_to_end(svm_setup):
         tau = np.asarray(r["tau"])
         assert tau.min() >= 2 and tau.max() <= TAU_MAX
     assert np.isfinite(log.rows[-1]["test_loss"])
+
+
+# ---------------------------------------------------------------------------
+# Theorem-2 alpha clamp under tau-heterogeneous cohorts
+# ---------------------------------------------------------------------------
+
+
+def test_theorem2_clamp_stress_tau_heterogeneous():
+    """Crafted stats with tau in {1, 64} drive the Theorem-2 clamp
+    (alpha_k = min(alpha, 0.999 * 2L / A_min) when 2L/A_min < 1) through
+    active AND inactive rounds; the device ControllerCore must pin the
+    numpy oracle's clamp activations, alpha_k values, and tau trace
+    exactly. Large-beta rounds (A_min >> 2L) activate the clamp and
+    collapse taus to tau_min; a near-zero-beta straggler lifts the bound
+    above 1 (clamp off) and its eps-floored A_i sends its tau to
+    tau_max — the bi-directional extremes the clamp guards.
+    """
+    Cc, TMAX = 4, 64
+    cfg = ControllerConfig(eta=0.5, alpha=0.95, tau_max=TMAX, tau_init=2)
+    core = ControllerCore(cfg, Cc)
+    oracle = FedVecaController(cfg, Cc)
+
+    taus_core = np.array([1, 64, 1, 64], np.int32)
+    taus_orc = taus_core.copy()
+    p = np.full(Cc, 0.25, np.float32)
+    # per-round (beta, delta): round 0 seeds the L estimate; rounds 1/3/5
+    # use large uniform betas (A_min = 2.0 >> 2L => clamp ON); rounds 2/4
+    # give client 0 a ~zero beta (A_min floors at eps => clamp OFF)
+    big = np.full(Cc, 2.0, np.float32)
+    strag = np.array([1e-6, 2.0, 2.0, 2.0], np.float32)
+    betas = [np.ones(Cc, np.float32), big, strag, big, strag, big]
+    ones = np.ones(Cc, np.float32)
+
+    def stats(beta, taus):
+        tau_k = float(np.sum(p * taus))
+        g = {"w": jnp.full((4,), 0.005, jnp.float32)}  # ||g||^2 = 1e-4
+        return RoundStats(
+            loss0=jnp.ones(Cc), beta=jnp.asarray(beta),
+            delta=jnp.asarray(ones), g0_sqnorm=jnp.ones(Cc),
+            tau=jnp.asarray(taus), tau_k=jnp.float32(tau_k),
+            global_grad=g, update_sqnorm=jnp.float32(1.0),
+            params_sqnorm=jnp.float32(100.0),
+            global_grad_sqnorm=jnp.float32(1e-4),
+        )
+
+    cstate = core.init_state({"w": np.zeros(4, np.float32)}, taus_core)
+    ostate = oracle.init_state()
+    members = jnp.arange(Cc, dtype=jnp.int32)
+    clamped = []
+    for k, beta in enumerate(betas):
+        cstate, cdiag = core.step(cstate, stats(beta, taus_core), members,
+                                  jnp.asarray(taus_core))
+        ostate, taus_orc, odiag = oracle.update(ostate, stats(beta, taus_orc))
+        taus_core = np.asarray(cdiag["tau_next"])
+        np.testing.assert_array_equal(taus_core, taus_orc)
+        np.testing.assert_allclose(float(cdiag["L"]), odiag["L"], rtol=1e-6)
+        if k >= 1:  # round 0 is the no-(beta,delta) passthrough
+            np.testing.assert_allclose(float(cdiag["alpha_k"]),
+                                       odiag["alpha_k"], rtol=1e-6)
+            # pin the activation against the oracle's own bound
+            bound = 2.0 * odiag["L"] / max(np.asarray(odiag["A"]).min(),
+                                           cfg.eps)
+            active = odiag["alpha_k"] < float(np.float32(cfg.alpha))
+            assert active == (bound < 1.0)
+            clamped.append(active)
+            if active:
+                np.testing.assert_allclose(odiag["alpha_k"], 0.999 * bound,
+                                           rtol=1e-6)
+                # clamp ON: tiny alpha_k makes every denom ~ A_i, tau -> min
+                assert taus_core.max() == cfg.tau_min
+            else:
+                # clamp OFF: the eps-floored straggler's denom underflows
+                # and Eq. 15 sends it to tau_max (unbounded direction)
+                assert taus_core[0] == cfg.tau_max
+    assert any(clamped) and not all(clamped)

@@ -100,11 +100,12 @@ def setup():
 
 
 def _engine(model, ds, mesh=None, mode="fedveca", cohort=None, agg="fallback",
-            controller=None, donate=False):
+            controller=None, donate=False, wire="none"):
     return RoundEngine(
         model.loss,
         EngineConfig(mode=mode, eta=0.05, tau_max=TAU_MAX, batch_size=BATCH,
-                     cohort_size=cohort, aggregator=agg, donate=donate),
+                     cohort_size=cohort, aggregator=agg, donate=donate,
+                     wire=wire),
         shards=DeviceShards.from_datasets(ds, mesh=mesh),
         num_clients=C,
         controller=controller,
@@ -438,3 +439,83 @@ def test_sharded_simulator_smoke(setup):
         assert np.isfinite(r["train_loss"])
         tau = np.asarray(r["tau"])
         assert tau.min() >= 2 and tau.max() <= TAU_MAX
+
+
+# ---------------------------------------------------------------------------
+# wire stage (core/wire.py, DESIGN.md §15) on the sharded round
+# ---------------------------------------------------------------------------
+
+
+@needs_devices
+@pytest.mark.parametrize("wire", ["identity", "int8"])
+def test_sharded_wire_tau_trace_matches_single_device(setup, wire):
+    """Contract 2: with the wire stage active (and with the identity
+    bypass) the sharded fused trajectory still emits EXACTLY the
+    single-device tau trace — the shard-local error-feedback fold plus
+    psum reduce preserves the controller's integer decisions."""
+    model, ds, p, _, _ = setup
+    mesh = make_federated_mesh(8)
+    ctl_cfg = ControllerConfig(eta=0.05, tau_max=TAU_MAX)
+
+    def build(mesh_):
+        return _engine(model, ds, mesh_, cohort=8, donate=True, wire=wire,
+                       controller=ControllerCore(ctl_cfg, C, mesh=mesh_))
+
+    rng = np.random.default_rng(0)
+    sharded_eng = build(mesh)
+    cohorts = [sharded_eng.sample_cohort(rng) for _ in range(5)]
+    outs = {}
+    for name, eng in (("single", build(None)), ("sharded", sharded_eng)):
+        key = jax.random.PRNGKey(0)
+        params = model.init(jax.random.PRNGKey(0))
+        cstate = eng.init_controller_state(params, np.full(C, 2, np.int32))
+        taus = []
+        for k in range(5):
+            key, sub = jax.random.split(key)
+            params, cstate, _, diag = eng.run_fused(
+                params, cstate, p, key=sub, cohort=cohorts[k])
+            taus.append(np.asarray(diag["tau_next"]).copy())
+        outs[name] = (jax.tree.map(np.asarray, params), taus, eng)
+    for a, b in zip(outs["single"][1], outs["sharded"][1]):
+        np.testing.assert_array_equal(a, b)  # tau trace EXACT
+    for k in outs["single"][0]:
+        np.testing.assert_allclose(outs["single"][0][k], outs["sharded"][0][k],
+                                   atol=2e-5, rtol=1e-4)
+
+
+@needs_devices
+def test_wire_residuals_stay_client_sharded_through_donation(setup):
+    """The error-feedback rows are [C, ...] client-axis sharded state:
+    after 4 donated fused rounds they must still carry the client
+    NamedSharding (no silent gather/replication), hold real quantization
+    error, and zero out on reset_wire()."""
+    from repro.sharding.api import client_spec
+
+    model, ds, p, _, _ = setup
+    mesh = make_federated_mesh(8, pod=2)
+    ctl_cfg = ControllerConfig(eta=0.05, tau_max=TAU_MAX)
+    eng = _engine(model, ds, mesh, cohort=8, donate=True, wire="int8",
+                  controller=ControllerCore(ctl_cfg, C, mesh=mesh))
+    assert eng.wire_active
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(0)
+    params = model.init(jax.random.PRNGKey(0))
+    cstate = eng.init_controller_state(params, np.full(C, 2, np.int32))
+    for _ in range(4):
+        key, sub = jax.random.split(key)
+        params, cstate, _, _ = eng.run_fused(
+            params, cstate, p, key=sub, cohort=eng.sample_cohort(rng))
+    res = eng._wire_res
+    assert res is not None
+    want = client_spec(mesh, 1)[0]  # the client-axis partition entry
+    for leaf, plike in zip(jax.tree.leaves(res), jax.tree.leaves(params)):
+        assert leaf.shape == (C,) + plike.shape
+        # leading axis still split over the client axes of the mesh
+        # (trailing dims unsharded; specs may omit trailing Nones)
+        spec = leaf.sharding.spec
+        assert spec[0] == want, spec
+        assert all(s is None for s in spec[1:]), spec
+    # lossy codec left genuine error feedback behind
+    assert any(float(jnp.abs(x).max()) > 0 for x in jax.tree.leaves(res))
+    eng.reset_wire()
+    assert eng._wire_res is None

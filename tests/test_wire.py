@@ -1,0 +1,345 @@
+"""Wire stage (core/wire.py, DESIGN.md §15): codec laws, error-feedback
+telescoping, and the engine-level exactness contracts.
+
+The contracts under test:
+  * codec laws — roundtrip preserves shape/dtype, int8's error is bounded
+    by half a quantization bucket, top-k keeps exactly the largest-|x|
+    entries, ``payload_nbytes`` equals the actual payload byte count;
+  * error feedback telescopes — over T rounds, the sum of decoded
+    payloads plus the final residual equals the sum of raw updates;
+  * identity is BIT-identical — an engine built with wire='identity'
+    produces byte-for-byte the params of wire='none' on every strategy
+    mode and both aggregators (the bypass contract: no residual state,
+    no extra ops in the trace);
+  * the lossless limit — top-k with k >= every leaf's size decodes
+    exactly, so the full engine round matches wire='none' to the value;
+  * buffered parity survives a lossy codec — FedSimConfig(buffered=True)
+    in parity mode stays bitwise-equal to the sync driver with wire=int8
+    (residuals keyed by global client id on the streaming path).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineConfig, RoundEngine
+from repro.core.wire import (
+    IdentityCodec,
+    Int8QuantCodec,
+    TopKCodec,
+    WireCodec,
+    make_codec,
+    wire_fold,
+)
+from repro.data.partition import partition_case3
+from repro.data.synthetic import Dataset, binarize_even_odd, make_classification
+from repro.fed.simulator import FederatedSimulator, FedSimConfig
+from repro.models.model import build_model_by_name
+
+C, TAU_MAX, B = 3, 5, 8
+MODES = ["fedveca", "fednova", "fedavg", "fedprox", "scaffold"]
+
+
+def _tree(seed=0):
+    r = np.random.RandomState(seed)
+    return {
+        "w": jnp.asarray(r.randn(6, 4), jnp.float32),
+        "b": jnp.asarray(r.randn(9), jnp.float32),
+    }
+
+
+def _payload_bytes(t) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(t))
+
+
+# ---------------------------------------------------------------------------
+# codec laws
+# ---------------------------------------------------------------------------
+
+
+def test_make_codec_parses_specs():
+    for spec in (None, "", "none", "identity"):
+        assert make_codec(spec).is_identity
+    assert isinstance(make_codec("int8"), Int8QuantCodec)
+    tk = make_codec("topk:16")
+    assert isinstance(tk, TopKCodec) and tk.k == 16 and tk.name == "topk:16"
+    codec = Int8QuantCodec()
+    assert make_codec(codec) is codec  # instances pass through
+    with pytest.raises(ValueError, match="topk:K"):
+        make_codec("topk:x")
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        make_codec("gzip")
+    with pytest.raises(ValueError, match="k >= 1"):
+        TopKCodec(0)
+
+
+@pytest.mark.parametrize("codec", [Int8QuantCodec(), TopKCodec(5)],
+                         ids=["int8", "topk"])
+def test_roundtrip_preserves_shape_and_dtype(codec):
+    tree = _tree()
+    tree["h"] = jnp.asarray(np.random.RandomState(1).randn(3, 2),
+                            jnp.bfloat16)
+    out = codec.roundtrip(tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert x.shape == y.shape and x.dtype == y.dtype
+
+
+def test_identity_is_bitwise_noop():
+    tree = _tree()
+    tree["z"] = jnp.asarray([-0.0, 0.0, 1.5], jnp.float32)  # signed zeros
+    codec = IdentityCodec()
+    out = codec.roundtrip(tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+
+
+def test_int8_error_within_half_bucket():
+    tree = _tree(2)
+    out = Int8QuantCodec().roundtrip(tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        s = np.abs(np.asarray(x)).max() / 127.0
+        err = np.abs(np.asarray(x) - np.asarray(y)).max()
+        assert err <= s / 2 + 1e-7
+    # all-zero leaves quantize to zero (safe divisor, no NaN)
+    z = {"w": jnp.zeros((4, 4), jnp.float32)}
+    np.testing.assert_array_equal(
+        np.asarray(Int8QuantCodec().roundtrip(z)["w"]), 0.0
+    )
+
+
+def test_topk_keeps_exactly_the_largest_entries():
+    k = 5
+    tree = _tree(3)
+    out = TopKCodec(k).roundtrip(tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        xf, yf = np.asarray(x).ravel(), np.asarray(y).ravel()
+        kept = np.flatnonzero(yf)
+        assert kept.size <= k
+        top = np.argsort(-np.abs(xf))[:k]
+        assert set(kept) <= set(top)
+        np.testing.assert_array_equal(yf[kept], xf[kept])  # values exact
+    # k >= size sends the leaf dense: lossless
+    small = {"w": jnp.asarray([3.0, -1.0], jnp.float32)}
+    np.testing.assert_array_equal(
+        np.asarray(TopKCodec(10).roundtrip(small)["w"]),
+        np.asarray(small["w"]),
+    )
+
+
+@pytest.mark.parametrize(
+    "codec", [IdentityCodec(), Int8QuantCodec(), TopKCodec(5), TopKCodec(999)],
+    ids=["identity", "int8", "topk5", "topk999"],
+)
+def test_payload_nbytes_matches_actual_payload(codec):
+    tree = _tree(4)
+    assert codec.payload_nbytes(tree) == _payload_bytes(codec.encode(tree))
+
+
+def test_error_feedback_telescopes():
+    """Sum of decoded payloads + final residual == sum of raw updates:
+    compression error never accumulates, it only delays."""
+    r = np.random.RandomState(0)
+    rows = 4
+
+    def draw(t):
+        return {
+            "w": jnp.asarray(r.randn(rows, 6, 4) * (1 + t), jnp.float32),
+            "b": jnp.asarray(r.randn(rows, 9), jnp.float32),
+        }
+
+    for codec in (Int8QuantCodec(), TopKCodec(3)):
+        res = jax.tree.map(jnp.zeros_like, draw(0))
+        total_u = jax.tree.map(jnp.zeros_like, res)
+        total_dec = jax.tree.map(jnp.zeros_like, res)
+        for t in range(8):
+            u = draw(t)
+            dec, res = wire_fold(codec, u, res)
+            total_u = jax.tree.map(jnp.add, total_u, u)
+            total_dec = jax.tree.map(jnp.add, total_dec, dec)
+        for su, sd, rf in zip(jax.tree.leaves(total_u),
+                              jax.tree.leaves(total_dec),
+                              jax.tree.leaves(res)):
+            np.testing.assert_allclose(np.asarray(sd) + np.asarray(rf),
+                                       np.asarray(su), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine contracts
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def svm():
+    return build_model_by_name("svm-mnist")
+
+
+@pytest.fixture(scope="module")
+def round_inputs(svm):
+    params = svm.init(jax.random.PRNGKey(0))
+    r = np.random.RandomState(0)
+    batches = dict(
+        x=jnp.asarray(r.randn(C, TAU_MAX, B, 784), jnp.float32),
+        y=jnp.asarray(r.randint(0, 2, (C, TAU_MAX, B)), jnp.int32),
+    )
+    tau = np.array([5, 2, 3], np.int32)
+    p = np.array([0.5, 0.2, 0.3], np.float32)
+    return params, batches, tau, p
+
+
+def _engine(svm, mode, aggregator, wire):
+    return RoundEngine(
+        svm.loss,
+        EngineConfig(mode=mode, eta=0.01, tau_max=TAU_MAX,
+                     aggregator=aggregator, donate=False, wire=wire),
+        num_clients=C,
+    )
+
+
+def _run_rounds(eng, params, batches, tau, p, rounds=2):
+    scaffold = None
+    for _ in range(rounds):
+        params, _, scaffold = eng.run_round(
+            params, tau, p, 0.05, batches=batches, scaffold=scaffold
+        )
+    return params
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("aggregator", ["fallback", "pallas"])
+def test_identity_wire_bit_identical_every_mode(svm, round_inputs, mode,
+                                                aggregator):
+    """wire='identity' must be BYTE-for-byte wire='none' on all five
+    strategy modes and both reduce paths — the bypass contract."""
+    params, batches, tau, p = round_inputs
+    base = _run_rounds(_engine(svm, mode, aggregator, "none"),
+                       params, batches, tau, p)
+    ident = _run_rounds(_engine(svm, mode, aggregator, "identity"),
+                        params, batches, tau, p)
+    for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(ident)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+def test_lossless_topk_matches_none(svm, round_inputs):
+    """k >= every leaf's size is the lossless limit: the full engine
+    round (EF fold included — residuals stay exactly zero) must match
+    wire='none' to the value."""
+    params, batches, tau, p = round_inputs
+    base = _run_rounds(_engine(svm, "fedveca", "fallback", "none"),
+                       params, batches, tau, p, rounds=3)
+    big = _run_rounds(_engine(svm, "fedveca", "fallback", "topk:999999"),
+                      params, batches, tau, p, rounds=3)
+    for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(big)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_scaffold_rejects_lossy_wire(svm):
+    with pytest.raises(ValueError, match="wire"):
+        _engine(svm, "scaffold", "fallback", "int8")
+
+
+def test_wire_state_lifecycle_and_byte_accounting(svm, round_inputs):
+    params, batches, tau, p = round_inputs
+    eng = _engine(svm, "fedveca", "fallback", "int8")
+    assert eng.wire_active
+    # static per-client cost: one int8 per element + one f32 scale per leaf
+    leaves = jax.tree.leaves(params)
+    assert eng.wire_bytes_per_client(params) == sum(
+        x.size + 4 for x in leaves
+    )
+    assert eng._wire_res is None  # lazy until the first round
+    eng.run_round(params, tau, p, 0.05, batches=batches)
+    res = eng._wire_res
+    assert res is not None
+    for x, lf in zip(jax.tree.leaves(res), leaves):
+        assert x.shape == (C,) + lf.shape
+    # a lossy codec leaves real quantization error behind
+    assert any(float(jnp.abs(x).max()) > 0 for x in jax.tree.leaves(res))
+    eng.reset_wire()
+    assert eng._wire_res is None
+    # identity engines expose a dense byte cost and no state
+    ide = _engine(svm, "fedveca", "fallback", "none")
+    assert not ide.wire_active
+    assert ide.wire_bytes_per_client(params) == sum(
+        x.size * np.dtype(x.dtype).itemsize for x in leaves
+    )
+
+
+# ---------------------------------------------------------------------------
+# simulator integration: rows, accounting, and buffered parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sim_setup():
+    orig = make_classification(1000, (784,), 10, seed=0)
+    train = binarize_even_odd(orig)
+    parts = partition_case3(orig.y, 5, seed=0)
+    clients = [Dataset(train.x[s], train.y[s]) for s in parts]
+    return build_model_by_name("svm-mnist"), clients
+
+
+def test_driver_rows_surface_wire_bytes(sim_setup):
+    model, clients = sim_setup
+    base = dict(mode="fedveca", rounds=2, tau_max=4, batch_size=16, eta=0.05)
+    none = FederatedSimulator(model, clients,
+                              FedSimConfig(**base)).run()
+    int8 = FederatedSimulator(model, clients,
+                              FedSimConfig(**base, wire="int8")).run()
+    for log, name in ((none, "identity"), (int8, "int8")):
+        for row in log.rows:
+            assert row["wire"] == name and row["wire_bytes"] > 0
+    # the rows record the COMPRESSED uplink: ~4x under int8
+    ratio = none.rows[0]["wire_bytes"] / int8.rows[0]["wire_bytes"]
+    assert 3.5 < ratio < 4.05
+
+
+def test_buffered_parity_bitwise_with_int8_wire(sim_setup):
+    """Contract 3: parity mode (waves=1, instant, grad_decay=1.0) stays
+    bitwise-equal to the sync TrainDriver with a LOSSY codec active —
+    the streaming path's residuals are keyed by global client id and
+    fold in the same op order as the sync round."""
+    model, clients = sim_setup
+    base = dict(mode="fedveca", rounds=3, tau_max=4, batch_size=16, eta=0.05,
+                cohort_size=3, wire="int8")
+    sync = FederatedSimulator(model, clients, FedSimConfig(**base)).run()
+    par = FederatedSimulator(model, clients,
+                             FedSimConfig(**base, buffered=True)).run()
+    for rs, rb in zip(sync.rows, par.rows):
+        np.testing.assert_array_equal(rs["tau"], rb["tau"])
+        assert rs["train_loss"] == rb["train_loss"]
+        assert rs["wire_bytes"] == rb["wire_bytes"]
+    for a, b in zip(jax.tree.leaves(sync.params), jax.tree.leaves(par.params)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+def test_prototype_counts_encoded_payload_bytes(sim_setup):
+    """Satellite fix: the message-passing prototype bills the wire for
+    the codec PAYLOAD (int8 buffers + scales), not the dense f32 tree it
+    decodes into — and both dispatch fabrics account identically."""
+    from repro.fed.prototype import FedVecaClient, FedVecaServer
+
+    model, clients_data = sim_setup
+    sizes = np.array([len(d) for d in clients_data], float)
+    p = sizes / sizes.sum()
+
+    def run(wire, batched):
+        cl = [FedVecaClient(i, model, d, 16, 0.05, seed=0)
+              for i, d in enumerate(clients_data)]
+        srv = FedVecaServer(model, cl, p, 0.05, tau_max=4, batched=batched,
+                            wire=wire)
+        srv.run(2)
+        return srv
+
+    dense = run("none", True)
+    for batched in (True, False):
+        srv = run("int8", batched)
+        assert srv.wire.name == "int8"
+        # ~4x fewer uplink bytes than the dense accounting
+        assert 3.5 < dense.bytes_recv / srv.bytes_recv < 4.1
+        for row in srv.history:
+            assert row["wire"] == "int8"
+            assert row["wire_bytes"] * len(srv.history) == srv.bytes_recv
+        # error-feedback residuals accumulated on the clients
+        assert all(c._wire_res is not None for c in srv.clients)
+    # serial and batched fabrics bill the wire identically
+    assert run("int8", True).bytes_recv == run("int8", False).bytes_recv
